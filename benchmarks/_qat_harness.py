@@ -1,0 +1,182 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Trains reduced-config models on the deterministic synthetic corpus under the
+paper's exact protocol shapes (FP fine-tune / single-format QAT / multi-format
+QAT / anchor-storage QAT), then evaluates WikiText-2-style perplexity after
+PTQ to each evaluation format (paper §3.2 'Evaluation': every variant is
+converted to the target format before measurement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import get_format, ptq_pytree
+from repro.core.qat import QATConfig
+from repro.data.pipeline import DataConfig, LMDataset, eval_batches
+from repro.models import get_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, run_training
+
+EVAL_MXINT = [f"mxint{b}" for b in range(2, 9)]
+EVAL_MXFP = [f"mxfp{b}" for b in range(4, 9)]
+
+
+@dataclasses.dataclass
+class HarnessConfig:
+    arch: str = "qwen3-4b"            # reduced family proxy
+    train_formats: Sequence[str] = ("mxint2", "mxint4", "mxint6", "mxint8")
+    anchor: Optional[str] = None
+    block_size: int = 32
+    n_examples: int = 128             # paper: 128 WikiText-2 examples
+    seq_len: int = 64
+    batch: int = 8
+    epochs_per_format: int = 1
+    lr: float = 5e-4                  # QA-finetune lr (paper sweeps 1e-4..)
+    pretrain_steps: int = 600         # paper starts from PRETRAINED models
+    pretrain_lr: float = 2e-3
+    seed: int = 0
+    n_eval_batches: int = 8
+
+    def cache_key(self) -> str:
+        return f"{self.arch}_s{self.seed}_p{self.pretrain_steps}"
+
+
+def _build(hc: HarnessConfig, schedule: str):
+    cfg = get_reduced(hc.arch)
+    qat = QATConfig(formats=tuple(hc.train_formats), anchor=hc.anchor,
+                    block_size=hc.block_size)
+    api = get_model(cfg, qat)
+    data = LMDataset(DataConfig(vocab=cfg.vocab, seq_len=hc.seq_len,
+                                global_batch=hc.batch,
+                                n_examples=hc.n_examples, seed=hc.seed))
+    total = data.epoch_steps() * hc.epochs_per_format * len(hc.train_formats)
+    return cfg, api, data, total
+
+
+_BASE_CACHE: Dict[str, object] = {}
+
+
+def pretrained_base(hc: HarnessConfig):
+    """Pretrain (once, cached in-process and on disk) the shared base model —
+    the stand-in for the paper's pretrained HF checkpoints."""
+    import os
+    key = hc.cache_key()
+    if key in _BASE_CACHE:
+        return _BASE_CACHE[key]
+    cfg = get_reduced(hc.arch)
+    api = get_model(cfg, None)
+    ckdir = os.path.join("out", "bench_base", key)
+    from repro.checkpoint import io as ckpt_io
+    import jax as _jax
+    template = _jax.eval_shape(api.init_params,
+                               _jax.random.PRNGKey(hc.seed))
+    if ckpt_io.latest_step(ckdir) == hc.pretrain_steps:
+        params, _ = ckpt_io.restore(ckdir, template)
+        params = _jax.tree_util.tree_map(jnp.asarray, params)
+    else:
+        data = LMDataset(DataConfig(vocab=cfg.vocab, seq_len=hc.seq_len,
+                                    global_batch=16, seed=hc.seed))
+        out = run_training(api, data, AdamWConfig(lr=hc.pretrain_lr),
+                           LoopConfig(total_steps=hc.pretrain_steps,
+                                      schedule="fp"),
+                           seed=hc.seed)
+        params = out["state"].params
+        ckpt_io.save(ckdir, hc.pretrain_steps, params, keep_n=1)
+    _BASE_CACHE[key] = params
+    return params
+
+
+def train_variant(hc: HarnessConfig, schedule: str) -> Dict:
+    """Fine-tune FROM the pretrained base under the given schedule.
+
+    schedule: 'fp' | 'multiformat' | 'interleaved' | 'single:<pos>'.
+    """
+    from repro.optim.adamw import init_opt_state
+    from repro.train.state import TrainState, build_train_step
+    from repro.train.loop import make_schedule
+    import jax as _jax
+
+    cfg, api, data, total = _build(hc, schedule)
+    base = pretrained_base(hc)
+    opt_cfg = AdamWConfig(lr=hc.lr)
+    n_formats = len(hc.train_formats)
+    sched = make_schedule(schedule if schedule != "fp" else "fp",
+                          n_formats, total)
+    step_fn = _jax.jit(build_train_step(api, opt_cfg))
+    state = TrainState(
+        params=_jax.tree_util.tree_map(jnp.asarray, base),
+        opt=init_opt_state(base, opt_cfg),
+        step=jnp.zeros((), jnp.int32))
+    history = []
+    for step in range(total):
+        batch = _jax.tree_util.tree_map(jnp.asarray, data.batch_at(step))
+        state, metrics = step_fn(state, batch, jnp.int32(sched[step]))
+        history.append({k: float(v) for k, v in metrics.items()})
+    return {"cfg": cfg, "api": api, "params": state.params,
+            "history": history}
+
+
+def eval_ppl(cfg, api, params, fmt_name: Optional[str],
+             hc: HarnessConfig, use_anchor_ss: bool = False) -> float:
+    """PTQ params to fmt (direct, or via anchor+SS) and measure eval PPL."""
+    qcfg = QATConfig(formats=("mxint8",), block_size=hc.block_size)
+    if fmt_name is None:
+        p_eval = params
+    elif use_anchor_ss:
+        from repro.core import convert, dequantize, make_anchor
+        anchor_fmt = get_format(hc.anchor or
+                                ("mxint8" if fmt_name.startswith("mxint")
+                                 else "mxfp8"), hc.block_size)
+        am = make_anchor(params, qcfg, anchor_fmt)
+        low = convert(am, get_format(fmt_name, hc.block_size))
+        from repro.core.anchor import materialize
+        p_eval = materialize(low, params, dtype=jnp.float32)
+    else:
+        p_eval = ptq_pytree(params, qcfg, get_format(fmt_name, hc.block_size))
+
+    batches = eval_batches(DataConfig(vocab=cfg.vocab, seq_len=hc.seq_len,
+                                      global_batch=hc.batch,
+                                      seed=hc.seed),
+                           hc.n_eval_batches)
+    if not hasattr(api, "_jit_ce"):
+        api._jit_ce = jax.jit(
+            lambda p, b: api.train_loss(p, b, None)[1]["ce"])
+    loss_fn = api._jit_ce
+    losses = [float(loss_fn(p_eval, jax.tree_util.tree_map(jnp.asarray, b)))
+              for b in batches]
+    return float(np.exp(np.mean(losses)))
+
+
+def eval_accuracy(cfg, api, params, fmt_name: Optional[str],
+                  hc: HarnessConfig) -> float:
+    """Held-out next-token top-1 accuracy (the downstream-task stand-in)."""
+    qcfg = QATConfig(formats=("mxint8",), block_size=hc.block_size)
+    p_eval = params if fmt_name is None else \
+        ptq_pytree(params, qcfg, get_format(fmt_name, hc.block_size))
+    batches = eval_batches(DataConfig(vocab=cfg.vocab, seq_len=hc.seq_len,
+                                      global_batch=hc.batch, seed=hc.seed),
+                           hc.n_eval_batches)
+
+    from repro.models.transformer import (_embed, _lm_head_w, forward_hidden)
+    from repro.models.common import QuantCtx
+
+    @jax.jit
+    def acc_fn(p, tokens, labels):
+        x = _embed(p, cfg, tokens)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                               (x.shape[0], x.shape[1]))
+        hid, _, _ = forward_hidden(QuantCtx(), p, cfg, x, pos)
+        logits = hid.astype(jnp.float32) @ _lm_head_w(p, cfg) \
+            .astype(jnp.float32)
+        pred = jnp.argmax(logits, -1)
+        return jnp.mean((pred == labels).astype(jnp.float32))
+
+    accs = [float(acc_fn(p_eval, jnp.asarray(b["tokens"]),
+                         jnp.asarray(b["labels"]))) for b in batches]
+    return float(np.mean(accs))

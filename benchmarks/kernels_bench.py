@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: wall-clock of the jit'd MX ops on this host +
+bytes accounting (the HBM-traffic contract the TPU kernels are built to).
+
+CPU wall-clock is not TPU performance; it validates that the fused paths do
+less work than the unfused ones and provides the us_per_call CSV row format.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_format
+from repro.core.mx import dequantize, quantize, quantize_dequantize
+from repro.core.slice_scale import slice_and_scale
+from repro.kernels import ops
+
+
+def timeit(fn, *args, n=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    shape = (1024, 4096)
+    w = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(64, 1024)).astype(np.float32))
+    fmt8 = get_format("mxint8", 32)
+    fmt4 = get_format("mxint4", 32)
+
+    rows = []
+
+    f_quant = jax.jit(lambda v: quantize(v, fmt8, axis=0).codes)
+    rows.append(("core_quantize_mxint8", timeit(f_quant, w),
+                 f"{np.prod(shape)} elems"))
+
+    f_fq = jax.jit(lambda v: quantize_dequantize(v, fmt8, axis=0))
+    rows.append(("core_fake_quant_mxint8", timeit(f_fq, w), "fused"))
+
+    t8 = quantize(w, fmt8, axis=0)
+    f_ss = jax.jit(lambda t: slice_and_scale(t, fmt4).codes)
+    rows.append(("core_ss_8to4", timeit(f_ss, t8), "packed-domain"))
+
+    f_deq_mm = jax.jit(lambda xx, t: xx @ dequantize(t, jnp.float32))
+    rows.append(("xla_dequant_matmul_int8", timeit(f_deq_mm, x, t8),
+                 "XLA fused"))
+
+    # Pallas kernels (interpret mode on CPU — correctness-path timing only)
+    codes, scales = ops.to_weight_layout(t8)
+    rows.append(("pallas_mx_matmul_interp",
+                 timeit(lambda: ops.mx_matmul(x, codes, scales, fmt8,
+                                              interpret=True), n=3),
+                 "interpret=True"))
+    rows.append(("pallas_fake_quant_interp",
+                 timeit(lambda: ops.fake_quant(w, fmt8, axis=0,
+                                               interpret=True), n=3),
+                 "interpret=True"))
+
+    # bytes accounting: serving weight-read sizes per format
+    n_el = int(np.prod(shape))
+    for bits, name in ((16, "bf16"), (8, "mxint8"), (4, "mxint4_packed")):
+        b = n_el * bits // 8 + (n_el // 32 if bits < 16 else 0)
+        rows.append((f"weight_bytes_{name}", 0.0, f"{b}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

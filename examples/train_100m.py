@@ -1,0 +1,75 @@
+"""End-to-end driver: multi-format QAT fine-tune of a ~100M-param model for a
+few hundred steps with checkpointing + fault tolerance (deliverable (b)).
+
+The full smollm-135m config IS the ~100M-class model; on this CPU container
+we default to --layers 6 (a ~30M slice of the same architecture) so the run
+finishes in minutes. Pass --layers 30 for the full depth.
+
+  PYTHONPATH=src python examples/train_100m.py --steps 200
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.qat import QATConfig  # noqa: E402
+from repro.data.pipeline import DataConfig, LMDataset  # noqa: E402
+from repro.models import get_model  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.train.loop import LoopConfig, run_training  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", default="multiformat",
+                    choices=["multiformat", "interleaved", "fp"])
+    ap.add_argument("--ckpt", default="out/ckpt_100m")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    cfg = dataclasses.replace(cfg, n_layers=args.layers,
+                              compute_dtype=jnp.float32, seq_chunk=256)
+    qat = QATConfig(formats=("mxint2", "mxint4", "mxint6", "mxint8"),
+                    block_size=32)
+    api = get_model(cfg, qat)
+    data = LMDataset(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                global_batch=args.batch))
+
+    from repro.models.common import count_params
+    import jax
+    n = count_params(jax.eval_shape(api.init_params,
+                                    jax.random.PRNGKey(0)))
+    print(f"{args.arch} @ {args.layers}L: {n / 1e6:.1f}M params, "
+          f"{args.steps} steps, schedule={args.schedule}")
+    print(f"checkpoints -> {args.ckpt} (auto-resumes if present)")
+
+    t0 = time.time()
+    out = run_training(
+        api, data, AdamWConfig(lr=args.lr),
+        LoopConfig(total_steps=args.steps, schedule=args.schedule,
+                   ckpt_dir=args.ckpt, ckpt_every=50),
+        on_step=lambda s, m: print(
+            f"step {s:4d} fmt={m['fmt_idx']} loss={m['loss']:.4f} "
+            f"gnorm={m['grad_norm']:.2f} {m['sec'] * 1e3:.0f}ms")
+        if s % 10 == 0 else None)
+    dt = time.time() - t0
+    hist = out["history"]
+    print(f"\ndone: {len(hist)} steps in {dt:.0f}s "
+          f"({dt / max(len(hist), 1) * 1e3:.0f} ms/step)")
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
+          f"stragglers flagged: {len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

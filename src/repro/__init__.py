@@ -1,0 +1,3 @@
+"""repro: MF-QAT — multi-format QAT + Slice-and-Scale elastic inference,
+as a multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

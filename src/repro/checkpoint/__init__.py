@@ -1,0 +1,2 @@
+from repro.checkpoint import io
+from repro.checkpoint.anchor_ckpt import save_anchor, load_anchor

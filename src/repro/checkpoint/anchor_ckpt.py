@@ -1,0 +1,73 @@
+"""Anchor-format (packed MX) checkpoints — the paper's deployment artifact.
+
+Stores element codes bit-packed at their true width (2/4/6/8 bits via
+``core.packed``) plus int8 E8M0 scales and fp leaves. An MXINT8 anchor of a
+7B model is ~4.2x smaller than its f32 master checkpoint; SS conversion at
+load time then serves any lower format from this single artifact (§3.5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.anchor import AnchorModel
+from repro.core.formats import get_format
+from repro.core.mx import MXTensor
+from repro.core.packed import pack_np, unpack_np
+
+
+def save_anchor(path: str, model: AnchorModel, keep_tmp: bool = False) -> int:
+    """Write a packed anchor checkpoint. Returns bytes written."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    fmt = get_format(model.fmt_name)
+    arrays: Dict[str, np.ndarray] = {}
+    index = {"fmt": model.fmt_name, "block_size": fmt.block_size,
+             "quantized": {}, "raw": []}
+    for k, t in model.quantized.items():
+        codes = np.asarray(t.codes)
+        buf, shape = pack_np(codes, t.fmt.bits)
+        arrays[f"q:{k}:codes"] = buf
+        arrays[f"q:{k}:scales"] = np.asarray(t.scale_exp)
+        index["quantized"][k] = {
+            "shape": list(shape), "bits": t.fmt.bits,
+            "block_axis": t.block_axis,
+            "signed": t.fmt.kind == "int",
+            "scale_shape": list(t.scale_exp.shape),
+        }
+    for k, w in model.raw.items():
+        arrays[f"r:{k}"] = np.asarray(w)
+        index["raw"].append(k)
+    np.savez(os.path.join(tmp, "anchor.npz"), **arrays)
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump(index, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return sum(a.nbytes for a in arrays.values())
+
+
+def load_anchor(path: str) -> AnchorModel:
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    fmt = get_format(index["fmt"], index["block_size"])
+    quantized = {}
+    with np.load(os.path.join(path, "anchor.npz")) as z:
+        for k, meta in index["quantized"].items():
+            codes = unpack_np(z[f"q:{k}:codes"], meta["bits"],
+                              tuple(meta["shape"]), meta["signed"])
+            dtype = jnp.int8 if meta["signed"] else jnp.uint8
+            quantized[k] = MXTensor(
+                codes=jnp.asarray(codes, dtype),
+                scale_exp=jnp.asarray(z[f"q:{k}:scales"], jnp.int8),
+                fmt=fmt, block_axis=meta["block_axis"])
+        raw = {k: jnp.asarray(z[f"r:{k}"]) for k in index["raw"]}
+    return AnchorModel(quantized=quantized, raw=raw, fmt_name=index["fmt"])

@@ -1,0 +1,129 @@
+"""Checkpointing: atomic, manifest-driven, keep-N, resumable, reshardable.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        arrays.npz            flat path->array (gathered global views)
+        manifest.json         step, keys, dtypes, shapes, framework meta
+    <dir>/LATEST              text file: "step_000123"  (atomic rename)
+
+Design points for 1000+-node runs:
+  - writes go to a tmp dir then os.rename (atomic on POSIX) — a preempted
+    writer never corrupts LATEST;
+  - arrays are stored as *global* logical arrays keyed by path, so a restart
+    may use a different mesh/topology: load() re-shards onto whatever
+    shardings the new run provides (elastic scaling);
+  - keep_n garbage-collects old steps only after LATEST moves forward;
+  - anchor (packed MX) checkpoints live in ``anchor_ckpt.py`` and share the
+    manifest format.
+
+In a true multi-host deployment each host would write its addressable shards
+(orbax-style); this container is single-process, so save() gathers. The
+interface (save/restore by step + LATEST pointer) is host-count agnostic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+LATEST = "LATEST"
+
+
+def _flat(tree) -> Dict[str, Any]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(p): v for p, v in leaves}
+
+
+def _unflat_into(template, flat: Dict[str, Any]):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    vals = []
+    for p, old in leaves:
+        k = jax.tree_util.keystr(p)
+        if k not in flat:
+            raise KeyError(f"checkpoint missing {k}")
+        vals.append(flat[k])
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:09d}")
+
+
+def save(root: str, step: int, tree, extra_meta: Optional[Dict] = None,
+         keep_n: int = 3) -> str:
+    os.makedirs(root, exist_ok=True)
+    final = step_dir(root, step)
+    tmp = final + f".tmp.{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = _flat(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                 for k, a in arrays.items()},
+        "meta": extra_meta or {},
+    }
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    # advance LATEST atomically
+    ltmp = os.path.join(root, LATEST + ".tmp")
+    with open(ltmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.rename(ltmp, os.path.join(root, LATEST))
+
+    _gc(root, keep_n)
+    return final
+
+
+def _gc(root: str, keep_n: int):
+    steps = sorted(d for d in os.listdir(root) if d.startswith("step_")
+                   and not d.endswith(".tmp") and ".tmp." not in d)
+    for d in steps[:-keep_n] if keep_n > 0 else []:
+        shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+
+def latest_step(root: str) -> Optional[int]:
+    path = os.path.join(root, LATEST)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(root, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(root: str, template, step: Optional[int] = None,
+            shardings=None):
+    """Load into the structure of `template`; device_put with `shardings`
+    (any mesh — enables elastic re-scale on restart)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = step_dir(root, step)
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflat_into(template, flat)
+    tree = jax.tree_util.tree_map(
+        lambda t, x: np.asarray(x).astype(t.dtype)
+        if hasattr(t, "dtype") else x, template, tree)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    with open(os.path.join(d, MANIFEST)) as f:
+        manifest = json.load(f)
+    return tree, manifest

@@ -1,0 +1,41 @@
+"""Per-architecture configs (assigned pool) + shape specs.
+
+Select with ``--arch <id>`` in the launchers; ``get_config(id)`` here.
+"""
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+from repro.configs.shapes import (SHAPES, ShapeSpec, applicable,
+                                  decode_cache_len, subquadratic)
+
+_MODULES = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen2-72b": "qwen2_72b",
+    "smollm-135m": "smollm_135m",
+    "starcoder2-3b": "starcoder2_3b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _mod(name).reduced()

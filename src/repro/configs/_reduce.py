@@ -1,0 +1,29 @@
+"""Reduced same-family configs for CPU smoke tests."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+import jax.numpy as jnp
+
+
+def _reduce(cfg: ModelConfig) -> ModelConfig:
+    upd = dict(
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        vocab=512, compute_dtype=jnp.float32, seq_chunk=64,
+    )
+    if cfg.family == "moe":
+        upd.update(moe_experts=4, n_layers=2)
+    elif cfg.family == "hybrid":
+        upd.update(moe_experts=4, moe_every=2, moe_offset=1,
+                   attn_every=4, attn_offset=2, scan_group=4, n_layers=4,
+                   mamba_d_state=4)
+    elif cfg.family == "ssm":
+        upd.update(n_layers=2, n_kv_heads=4, rwkv_head_dim=16)
+    elif cfg.family == "encdec":
+        upd.update(n_layers=2, enc_layers=2, n_kv_heads=4)
+    elif cfg.family == "vlm":
+        upd.update(n_layers=2, vision_tokens=24)
+    else:
+        upd.update(n_layers=2)
+    if cfg.sliding_window is not None:
+        upd["sliding_window"] = 32
+    return dataclasses.replace(cfg, **upd)

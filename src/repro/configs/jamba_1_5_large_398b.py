@@ -1,0 +1,20 @@
+"""jamba-1.5-large-398b — exact assigned config (see repo prompt; [source] in DESIGN.md)."""
+from repro.models.common import ModelConfig
+import dataclasses
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=24576, vocab=65536,
+    moe_experts=16, moe_topk=2, moe_every=2, moe_offset=1,
+    attn_every=8, attn_offset=4, scan_group=8,
+    mamba_d_state=16, mamba_d_conv=4, mamba_expand=2,
+)
+
+
+def reduced() -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    return _reduce(CONFIG)
+
+
+from repro.configs._reduce import _reduce  # noqa: E402

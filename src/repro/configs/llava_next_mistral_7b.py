@@ -1,0 +1,19 @@
+"""llava-next-mistral-7b — exact assigned config (see repo prompt; [source] in DESIGN.md)."""
+from repro.models.common import ModelConfig
+import dataclasses
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=32000,
+    vision_tokens=2880,  # anyres: 5 tiles x 576 patch embeds (stub frontend)
+    rope_theta=1e6,
+)
+
+
+def reduced() -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    return _reduce(CONFIG)
+
+
+from repro.configs._reduce import _reduce  # noqa: E402

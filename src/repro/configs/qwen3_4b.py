@@ -1,0 +1,18 @@
+"""qwen3-4b — exact assigned config (see repo prompt; [source] in DESIGN.md)."""
+from repro.models.common import ModelConfig
+import dataclasses
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8,
+    d_ff=9728, vocab=151936,
+    head_dim=128, qk_norm=True, rope_theta=1e6,
+)
+
+
+def reduced() -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    return _reduce(CONFIG)
+
+
+from repro.configs._reduce import _reduce  # noqa: E402

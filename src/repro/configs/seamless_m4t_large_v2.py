@@ -1,0 +1,18 @@
+"""seamless-m4t-large-v2 — exact assigned config (see repo prompt; [source] in DESIGN.md)."""
+from repro.models.common import ModelConfig
+import dataclasses
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab=256206,
+    act="gelu", enc_layers=24, audio_downsample=4,
+)
+
+
+def reduced() -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    return _reduce(CONFIG)
+
+
+from repro.configs._reduce import _reduce  # noqa: E402

@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution: MX formats, Slice-and-Scale, MF-QAT."""
+from repro.core.formats import (MXFormat, MXINT, MXFP, REGISTRY, get_format,
+                                delta_e, TRAIN_FORMATS_MXINT,
+                                TRAIN_FORMATS_MXFP, EVAL_FORMATS_MXINT,
+                                EVAL_FORMATS_MXFP, ANCHOR_MXINT, ANCHOR_MXFP)
+from repro.core.mx import (MXTensor, quantize, dequantize,
+                           quantize_dequantize, compute_scale_exp,
+                           encode_fp, decode_fp, decode_elements,
+                           quantize_fp_element_value)
+from repro.core.slice_scale import (slice_and_scale, ss_mxint, ss_mxfp,
+                                    ss_quantize_dequantize)
+from repro.core.fake_quant import (fake_quant, fake_quant_anchored,
+                                   fake_quant_switch,
+                                   fake_quant_anchored_switch)
+from repro.core.qat import (QATConfig, sequential_schedule,
+                            interleaved_schedule, fp_schedule,
+                            single_format_schedule, ptq_pytree)
+from repro.core.anchor import (AnchorModel, make_anchor, convert,
+                               materialize, storage_bytes)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

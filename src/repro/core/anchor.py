@@ -1,0 +1,100 @@
+"""Anchor-format model storage + elastic conversion (paper §3.5).
+
+Inference-time pipeline:
+  1. quantize the trained master weights once to the anchor format A
+     (MXINT8 / MXFP8)  ->  ``AnchorModel`` (MXTensor leaves + raw leaves),
+  2. at runtime, derive any lower-precision format t via Slice-and-Scale,
+     *without* access to the full-precision weights,
+  3. dequantize W_t (or feed packed codes straight into the dequant-fused
+     Pallas GEMM) and serve.
+
+The AnchorModel is a plain pytree, so it jits/shards/checkpoints like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import MXFormat, get_format
+from repro.core.mx import MXTensor, dequantize, quantize
+from repro.core.qat import QATConfig
+from repro.core.slice_scale import slice_and_scale
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("quantized", "raw"), meta_fields=("fmt_name",))
+@dataclasses.dataclass
+class AnchorModel:
+    """quantized: dict path -> MXTensor; raw: dict path -> fp leaf."""
+
+    quantized: Dict[str, MXTensor]
+    raw: Dict[str, jax.Array]
+    fmt_name: str
+
+
+def _flatten_paths(params) -> Dict[str, jax.Array]:
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    return {jax.tree_util.keystr(p): w for p, w in leaves}
+
+
+def make_anchor(params, cfg: QATConfig, anchor: MXFormat | None = None
+                ) -> AnchorModel:
+    """One-time quantization of master weights to the anchor format."""
+    from repro.core.qat import pytree_block_axis
+    fmt = anchor or cfg.anchor_obj()
+    assert fmt is not None, "anchor format required"
+    q, raw = {}, {}
+    for path, w in _flatten_paths(params).items():
+        ax = pytree_block_axis(w)
+        if (w.ndim >= 2 and cfg.is_quantized_path(path)
+                and w.shape[ax] % fmt.block_size == 0):
+            q[path] = quantize(w, fmt, axis=ax)
+        else:
+            raw[path] = w
+    return AnchorModel(quantized=q, raw=raw, fmt_name=fmt.name)
+
+
+def convert(model: AnchorModel, target: MXFormat) -> AnchorModel:
+    """Slice-and-Scale the whole model to a lower-precision format."""
+    return AnchorModel(
+        quantized={k: slice_and_scale(t, target)
+                   for k, t in model.quantized.items()},
+        raw=model.raw,
+        fmt_name=target.name,
+    )
+
+
+def materialize(model: AnchorModel, treedef_params, dtype=jnp.bfloat16):
+    """Rebuild a dense param pytree (for engines without packed-GEMM support).
+
+    ``treedef_params`` is any pytree with the original structure (e.g. the
+    ShapeDtypeStruct tree) used to re-nest the flat path->leaf mapping.
+    """
+    flat = _flatten_paths(treedef_params)
+    out = {}
+    for path in flat:
+        if path in model.quantized:
+            out[path] = dequantize(model.quantized[path], dtype=dtype)
+        else:
+            out[path] = model.raw[path].astype(dtype) \
+                if jnp.issubdtype(model.raw[path].dtype, jnp.floating) \
+                else model.raw[path]
+    leaves_paths = jax.tree_util.tree_flatten_with_path(treedef_params)
+    rebuilt = jax.tree_util.tree_unflatten(
+        leaves_paths[1],
+        [out[jax.tree_util.keystr(p)] for p, _ in leaves_paths[0]])
+    return rebuilt
+
+
+def storage_bytes(model: AnchorModel) -> int:
+    """True packed checkpoint size (elements at fmt.bits + E8M0 scales)."""
+    total = 0
+    for t in model.quantized.values():
+        total += t.nbytes_logical
+    for w in model.raw.values():
+        total += w.size * w.dtype.itemsize
+    return total

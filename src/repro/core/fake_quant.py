@@ -1,0 +1,74 @@
+"""Straight-through-estimator fake quantization for QAT (paper §3.2 / §3.5).
+
+Two forward operators:
+
+  direct:    W_t = Q_t(W_fp)                     (plain QAT, one format)
+  anchored:  W_A = Q_A(W_fp);  W_t = Q_{A→t}(W_A)   (anchor-storage pipeline)
+
+Gradients propagate through both with the straight-through estimator
+(Yin et al., 2019): d/dW fake_quant(W) := 1.
+
+Multi-format training uses ``fake_quant_switch`` — a ``lax.switch`` over a
+static tuple of formats with a *traced* index, so one jitted train step serves
+every format in the schedule with no recompilation.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import MXFormat
+from repro.core.mx import quantize, dequantize, quantize_dequantize
+from repro.core.slice_scale import slice_and_scale
+
+
+def _ste(w: jax.Array, w_q: jax.Array) -> jax.Array:
+    """w + stop_grad(w_q - w): value w_q, gradient identity."""
+    return w + jax.lax.stop_gradient(w_q.astype(w.dtype) - w)
+
+
+def fake_quant(w: jax.Array, fmt: MXFormat, axis: int = -1) -> jax.Array:
+    """Direct STE fake-quant: value = dequant(quant(w)), grad = identity."""
+    return _ste(w, quantize_dequantize(w, fmt, axis=axis))
+
+
+def fake_quant_anchored(w: jax.Array, anchor: MXFormat, target: MXFormat,
+                        axis: int = -1) -> jax.Array:
+    """Anchored STE fake-quant (paper Eq. 7): W_t = Q_{A→t}(Q_A(W))."""
+    t_a = quantize(w, anchor, axis=axis)
+    t_t = slice_and_scale(t_a, target)
+    return _ste(w, dequantize(t_t, dtype=w.dtype))
+
+
+def fake_quant_switch(w: jax.Array, formats: Sequence[MXFormat],
+                      idx: jax.Array, axis: int = -1) -> jax.Array:
+    """STE fake-quant with a traced format index over a static format tuple.
+
+    ``idx`` selects which format's quantizer runs this step; out-of-range idx
+    (== len(formats)) means "no quantization" (full-precision branch), which
+    lets the same jitted step also serve the FP fine-tuning baseline.
+    """
+    branches = [lambda x, f=f: quantize_dequantize(x, f, axis=axis)
+                for f in formats]
+    branches.append(lambda x: x.astype(jnp.float32).astype(x.dtype))
+    w_q = jax.lax.switch(jnp.clip(idx, 0, len(formats)), branches, w)
+    return _ste(w, w_q)
+
+
+def fake_quant_anchored_switch(w: jax.Array, anchor: MXFormat,
+                               targets: Sequence[MXFormat], idx: jax.Array,
+                               axis: int = -1) -> jax.Array:
+    """Anchored STE fake-quant with traced target-format index."""
+    t_a = quantize(w, anchor, axis=axis)
+
+    def mk(f):
+        def br(t):
+            return dequantize(slice_and_scale(t, f), dtype=w.dtype)
+        return br
+
+    branches = [mk(f) for f in targets]
+    branches.append(lambda t: dequantize(t, dtype=w.dtype))  # anchor itself
+    w_q = jax.lax.switch(jnp.clip(idx, 0, len(targets)), branches, t_a)
+    return _ste(w, w_q)

@@ -1,0 +1,245 @@
+"""Block-wise MX quantization / dequantization (pure jnp, OCP MX semantics).
+
+Follows the paper's Eqs. (1)-(3)/(5):
+
+    shared_exp = floor(log2(max_i |V_i|)) - e_max(f)
+    X          = 2^shared_exp
+    P_i        = quantize_f(V_i / X)
+
+Elements are stored as *codes*:
+  - MXINT:  int8 two's-complement integer value in [-(2^(b-1)-1), 2^(b-1)-1]
+  - MXFP:   uint8 bit pattern  s | e(ebits) | m(mbits)  in the low `bits` bits
+
+Scales are stored as int8 exponents (E8M0, value = 2^scale_exp).
+
+The block axis is arbitrary; blocks are formed along it and its length must be
+divisible by ``fmt.block_size``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import (MXFormat, SCALE_EXP_MAX, SCALE_EXP_MIN)
+
+
+# =============================================================================
+# MXTensor container
+# =============================================================================
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("codes", "scale_exp"),
+    meta_fields=("fmt", "block_axis"),
+)
+@dataclasses.dataclass
+class MXTensor:
+    """A tensor in an MX format.
+
+    codes:      element codes, same shape as the logical tensor (int8/uint8)
+    scale_exp:  int8 block-scale exponents; shape = codes.shape with the block
+                axis divided by fmt.block_size
+    fmt:        the MXFormat (static)
+    block_axis: which axis blocks run along (static, non-negative)
+    """
+
+    codes: jax.Array
+    scale_exp: jax.Array
+    fmt: MXFormat
+    block_axis: int
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.codes.shape)
+
+    @property
+    def nbytes_logical(self) -> int:
+        """True packed storage footprint in bytes (elements + scales)."""
+        n = int(np.prod(self.shape)) if self.shape else 1
+        nblocks = n // self.fmt.block_size
+        return (n * self.fmt.bits + nblocks * 8 + 7) // 8
+
+
+def _norm_axis(axis: int, ndim: int) -> int:
+    axis = axis % ndim
+    return axis
+
+
+def _to_blocks(x: jax.Array, block_size: int, axis: int) -> jax.Array:
+    """(..., n, ...) -> (..., n/bs, bs) with block axis moved last."""
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if n % block_size != 0:
+        raise ValueError(f"block axis length {n} not divisible by block size "
+                         f"{block_size}")
+    return x.reshape(*x.shape[:-1], n // block_size, block_size)
+
+
+def _from_blocks(xb: jax.Array, axis: int, ndim: int) -> jax.Array:
+    x = xb.reshape(*xb.shape[:-2], xb.shape[-2] * xb.shape[-1])
+    return jnp.moveaxis(x, -1, axis)
+
+
+def _floor_log2(x: jax.Array) -> jax.Array:
+    """floor(log2(x)) for x > 0, exact at powers of two (frexp-based)."""
+    m, e = jnp.frexp(x)
+    del m
+    return (e - 1).astype(jnp.int32)
+
+
+def _exp2i(e: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """2^e for integer e (exact, via ldexp)."""
+    return jnp.ldexp(jnp.ones_like(e, dtype=dtype), e)
+
+
+# =============================================================================
+# Element quantizers (value domain)
+# =============================================================================
+def quantize_int_element(y: jax.Array, fmt: MXFormat) -> jax.Array:
+    """clip_b(round(y)) -> int8 integer codes. Round half-to-even."""
+    assert fmt.kind == "int"
+    maxq = fmt.int_maxq
+    q = jnp.clip(jnp.round(y), -maxq, maxq)
+    return q.astype(jnp.int8)
+
+
+def quantize_fp_element_value(y: jax.Array, fmt: MXFormat) -> jax.Array:
+    """Round-to-nearest-even into the MXFP(η,μ) value set, saturating.
+
+    Returns float32 *values* (each exactly representable in the target format).
+    Subnormals are supported; overflow saturates to ±fp_max (OCP conversion).
+    """
+    assert fmt.kind == "fp"
+    y = y.astype(jnp.float32)
+    a = jnp.abs(y)
+    # Exponent of y (floor log2), clamped at the subnormal boundary.
+    _, e_raw = jnp.frexp(jnp.where(a > 0, a, 1.0))
+    e = jnp.maximum(e_raw - 1, fmt.emin)
+    quantum = _exp2i(e - fmt.mbits)
+    q = jnp.round(y / quantum) * quantum
+    q = jnp.clip(q, -fmt.fp_max, fmt.fp_max)
+    return jnp.where(a > 0, q, jnp.zeros_like(q)).astype(jnp.float32)
+
+
+# ---- MXFP code <-> value ----------------------------------------------------
+def encode_fp(values: jax.Array, fmt: MXFormat) -> jax.Array:
+    """Exactly-representable float values -> uint8 bit patterns."""
+    assert fmt.kind == "fp"
+    v = values.astype(jnp.float32)
+    s = (v < 0) | ((v == 0) & (jnp.signbit(v)))
+    a = jnp.abs(v)
+    _, e_raw = jnp.frexp(jnp.where(a > 0, a, 1.0))
+    expo = e_raw - 1                                  # floor(log2 a)
+    is_sub = (expo < fmt.emin) | (a == 0)
+    # normal: mant field = (a / 2^expo - 1) * 2^mbits
+    mant_n = jnp.round((a * _exp2i(-expo) - 1.0) * (1 << fmt.mbits))
+    e_field_n = expo + fmt.fp_bias
+    # subnormal: mant field = a / 2^(emin - mbits)
+    mant_s = jnp.round(a * _exp2i(jnp.full_like(expo, fmt.mbits - fmt.emin)))
+    e_field = jnp.where(is_sub, 0, e_field_n).astype(jnp.int32)
+    mant = jnp.where(is_sub, mant_s, mant_n).astype(jnp.int32)
+    code = (s.astype(jnp.int32) << (fmt.bits - 1)) | (e_field << fmt.mbits) | mant
+    return code.astype(jnp.uint8)
+
+
+def _fp_decode_table(fmt: MXFormat) -> np.ndarray:
+    """256-entry LUT: uint8 code -> float32 value (top bits ignored)."""
+    assert fmt.kind == "fp"
+    codes = np.arange(256, dtype=np.uint32) & ((1 << fmt.bits) - 1)
+    s = (codes >> (fmt.bits - 1)) & 1
+    e = (codes >> fmt.mbits) & ((1 << fmt.ebits) - 1)
+    m = codes & ((1 << fmt.mbits) - 1)
+    normal = e > 0
+    mag = np.where(
+        normal,
+        (1.0 + m / (1 << fmt.mbits)) * np.exp2(e.astype(np.float64) - fmt.fp_bias),
+        (m / (1 << fmt.mbits)) * np.exp2(float(fmt.emin)),
+    )
+    vals = np.where(s == 1, -mag, mag).astype(np.float32)
+    # OCP E4M3: exponent-all-ones + mantissa-all-ones is NaN.
+    if fmt.ebits == 4 and fmt.mbits == 3:
+        nan_mask = (e == 15) & (m == 7)
+        vals = np.where(nan_mask, np.nan, vals).astype(np.float32)
+    return vals
+
+
+@functools.lru_cache(maxsize=None)
+def _fp_decode_table_cached(fmt: MXFormat) -> np.ndarray:
+    return _fp_decode_table(fmt)
+
+
+def decode_fp(codes: jax.Array, fmt: MXFormat, dtype=jnp.float32) -> jax.Array:
+    lut = jnp.asarray(_fp_decode_table_cached(fmt), dtype=dtype)
+    return jnp.take(lut, codes.astype(jnp.int32), axis=0)
+
+
+def decode_elements(codes: jax.Array, fmt: MXFormat, dtype=jnp.float32) -> jax.Array:
+    if fmt.kind == "int":
+        return codes.astype(dtype)
+    return decode_fp(codes, fmt, dtype=dtype)
+
+
+# =============================================================================
+# Block quantize / dequantize
+# =============================================================================
+def compute_scale_exp(v: jax.Array, fmt: MXFormat, axis: int = -1) -> jax.Array:
+    """shared_exp per block: floor(log2 max|V|) - emax(f), clipped to E8M0."""
+    axis = _norm_axis(axis, v.ndim)
+    vb = _to_blocks(v.astype(jnp.float32), fmt.block_size, axis)
+    bmax = jnp.max(jnp.abs(vb), axis=-1)
+    exp = jnp.where(bmax > 0, _floor_log2(jnp.where(bmax > 0, bmax, 1.0)),
+                    SCALE_EXP_MIN + fmt.emax)
+    exp = exp - fmt.emax
+    exp = jnp.clip(exp, SCALE_EXP_MIN, SCALE_EXP_MAX)
+    return exp.astype(jnp.int8)
+
+
+def quantize(v: jax.Array, fmt: MXFormat, axis: int = -1) -> MXTensor:
+    """Direct MX quantization of a float tensor (paper Eqs. 1-3/5)."""
+    axis = _norm_axis(axis, v.ndim)
+    v32 = v.astype(jnp.float32)
+    scale_exp = compute_scale_exp(v32, fmt, axis)
+    vb = _to_blocks(v32, fmt.block_size, axis)
+    inv_scale = _exp2i(-scale_exp.astype(jnp.int32))[..., None]
+    y = vb * inv_scale
+    if fmt.kind == "int":
+        codes_b = quantize_int_element(y, fmt)
+    else:
+        codes_b = encode_fp(quantize_fp_element_value(y, fmt), fmt)
+    codes = _from_blocks(codes_b, axis, v.ndim)
+    return MXTensor(codes=codes, scale_exp=scale_exp, fmt=fmt, block_axis=axis)
+
+
+def dequantize(t: MXTensor, dtype=jnp.float32) -> jax.Array:
+    """V̂_i = X * P_i."""
+    vals_b = _to_blocks(decode_elements(t.codes, t.fmt, jnp.float32),
+                        t.fmt.block_size, t.block_axis)
+    scale = _exp2i(t.scale_exp.astype(jnp.int32))[..., None]
+    out = vals_b * scale
+    return _from_blocks(out, t.block_axis, t.codes.ndim).astype(dtype)
+
+
+def quantize_dequantize(v: jax.Array, fmt: MXFormat, axis: int = -1,
+                        dtype=None) -> jax.Array:
+    """Fused fake-quant value: dequantize(quantize(v)) in one pass.
+
+    Avoids materializing codes; used by the QAT forward path.
+    """
+    axis = _norm_axis(axis, v.ndim)
+    v32 = v.astype(jnp.float32)
+    scale_exp = compute_scale_exp(v32, fmt, axis).astype(jnp.int32)
+    vb = _to_blocks(v32, fmt.block_size, axis)
+    inv_scale = _exp2i(-scale_exp)[..., None]
+    scale = _exp2i(scale_exp)[..., None]
+    y = vb * inv_scale
+    if fmt.kind == "int":
+        maxq = float(fmt.int_maxq)
+        q = jnp.clip(jnp.round(y), -maxq, maxq)
+    else:
+        q = quantize_fp_element_value(y, fmt)
+    out = _from_blocks(q * scale, axis, v.ndim)
+    return out.astype(dtype if dtype is not None else v.dtype)

@@ -1,0 +1,146 @@
+"""Multi-format QAT configuration, schedules, and pytree wiring (paper §3.2).
+
+The paper's protocol:
+  - weight-only quantization of decoder-stack matmul weights (embeddings,
+    lm_head, norms, biases, and small vector params excluded),
+  - sequential schedule in increasing bit order (2→4→6→8), one epoch per
+    format; for >2B models one total epoch with formats given equal step
+    budgets inside it,
+  - the anchor-storage variant cycles target formats uniformly per step.
+
+We express a schedule as an int32 array ``format_ids[num_steps]`` indexing a
+static tuple of formats; the train step takes ``format_ids[step]`` as a traced
+scalar and dispatches via ``lax.switch`` (no recompiles across formats).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import MXFormat, get_format
+from repro.core.fake_quant import (fake_quant_anchored_switch,
+                                   fake_quant_switch)
+
+# Default exclusion: anything that is not a >=2D matmul weight, plus
+# embeddings/lm_head (paper §3.2) and modality frontends.
+DEFAULT_EXCLUDE = (
+    r"embed", r"lm_head", r"norm", r"bias", r"scale", r"rope",
+    r"router",          # MoE router stays fp (standard practice)
+    r"conv",            # mamba conv1d (tiny, sensitive)
+    r"A_log", r"\bD\b", r"dt_",   # mamba SSM params
+    r"time_", r"decay", r"bonus", r"token_shift",   # rwkv ddlerp vectors
+    r"vision", r"frontend",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QATConfig:
+    """Quantization-aware-training configuration attached to a model.
+
+    formats:     static tuple of format names in the training set
+    anchor:      anchor format name for the §3.5 pipeline (None = direct QAT)
+    block_size:  MX scaling block size
+    block_axis:  which weight axis blocks run along (contraction dim = 0 for
+                 our (d_in, d_out) weight layout)
+    exclude:     regexes of param path fragments NOT quantized
+    """
+
+    formats: Tuple[str, ...] = ()
+    anchor: Optional[str] = None
+    block_size: int = 32
+    block_axis: int = 0
+    exclude: Tuple[str, ...] = DEFAULT_EXCLUDE
+
+    @property
+    def enabled(self) -> bool:
+        return len(self.formats) > 0
+
+    def format_objs(self) -> Tuple[MXFormat, ...]:
+        return tuple(get_format(n, self.block_size) for n in self.formats)
+
+    def anchor_obj(self) -> Optional[MXFormat]:
+        return get_format(self.anchor, self.block_size) if self.anchor else None
+
+    def is_quantized_path(self, path: str) -> bool:
+        low = path.lower()
+        return not any(re.search(p, low) for p in self.exclude)
+
+    # ------------------------------------------------------------------ #
+    def apply(self, w: jax.Array, path: str, fmt_idx: jax.Array) -> jax.Array:
+        """Fake-quantize one weight according to the config (STE)."""
+        if not self.enabled or not self.is_quantized_path(path) or w.ndim < 2:
+            return w
+        axis = self.block_axis
+        if w.shape[axis] % self.block_size != 0:
+            return w  # non-blockable dim (rare; e.g. tiny reduced configs)
+        fmts = self.format_objs()
+        if self.anchor is not None:
+            return fake_quant_anchored_switch(
+                w, self.anchor_obj(), fmts, fmt_idx, axis=axis)
+        return fake_quant_switch(w, fmts, fmt_idx, axis=axis)
+
+
+# =============================================================================
+# Schedules
+# =============================================================================
+def sequential_schedule(num_formats: int, steps_per_format: int) -> np.ndarray:
+    """Paper default: one 'epoch' (steps_per_format) per format, in order.
+
+    Formats must already be sorted in increasing bit order by the caller —
+    ``formats.TRAIN_FORMATS_*`` are.
+    """
+    return np.repeat(np.arange(num_formats, dtype=np.int32), steps_per_format)
+
+
+def interleaved_schedule(num_formats: int, total_steps: int) -> np.ndarray:
+    """>2B-model variant: equal per-format step counts inside one epoch,
+    cycled uniformly (also the anchor-storage §3.5 training schedule)."""
+    return (np.arange(total_steps, dtype=np.int32)) % num_formats
+
+
+def fp_schedule(total_steps: int, num_formats: int) -> np.ndarray:
+    """Full-precision fine-tuning baseline: index == len(formats) selects the
+    pass-through branch of ``fake_quant_switch``."""
+    return np.full(total_steps, num_formats, dtype=np.int32)
+
+
+def single_format_schedule(fmt_pos: int, total_steps: int) -> np.ndarray:
+    """Single-format QAT baseline at format position ``fmt_pos``."""
+    return np.full(total_steps, fmt_pos, dtype=np.int32)
+
+
+# =============================================================================
+# Pytree-level PTQ helpers (used at eval / export time)
+# =============================================================================
+def pytree_block_axis(w) -> int:
+    """Contraction axis of a (possibly stacked) weight leaf.
+
+    In-model weights are 2D (d_in, d_out) with blocks along axis 0; in the
+    param pytree they appear stacked over scan groups (G, d_in, d_out) and
+    experts (G, E, d_in, d_out) — the contraction dim is always ndim-2.
+    """
+    return max(w.ndim - 2, 0)
+
+
+def ptq_pytree(params, cfg: QATConfig, fmt: MXFormat):
+    """Post-training-quantize every quantizable leaf (quant→dequant values)."""
+    from repro.core.mx import quantize_dequantize
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = flat
+
+    def one(path, w):
+        p = jax.tree_util.keystr(path)
+        ax = pytree_block_axis(w)
+        if (w.ndim >= 2 and cfg.is_quantized_path(p)
+                and w.shape[ax] % fmt.block_size == 0):
+            return quantize_dequantize(w, fmt, axis=ax)
+        return w
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, w) for p, w in leaves])

@@ -1,0 +1,85 @@
+"""Slice-and-Scale format conversion (paper §3.3 / §3.4).
+
+Converts a high-precision MX representation to a lower-precision one *without*
+re-expanding to FP32 master weights:
+
+  SSMXINT (Eq. 4):  P_l = clip_{b_l}(round(P_h / 2^Δe)),  X_l = X_h · 2^Δe,
+                    Δe = e_max(b_h) − e_max(b_l) = b_h − b_l.
+                    On integer codes this is a right-shift with round — we
+                    implement exact round-to-nearest-even on int32 lanes, which
+                    agrees bit-for-bit with ``jnp.round`` of the exact quotient.
+
+  SSMXFP  (Eq. 6):  P_l = quantize_{η_l,μ_l}(P_h / 2^Δe),  X_l = X_h · 2^Δe,
+                    Δe = e_max(η_h) − e_max(η_l).
+
+Because shared_exp = floor(log2 max|V|) − e_max(f), the SS scale equals the
+direct-quantization scale *exactly* (modulo E8M0 saturation); only element
+rounding can differ (double rounding), bounded by 1 ulp of the target format.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import MXFormat, SCALE_EXP_MAX, SCALE_EXP_MIN, delta_e
+from repro.core.mx import (MXTensor, decode_fp, encode_fp,
+                           quantize_fp_element_value, _exp2i)
+
+
+def _rshift_rne(p: jax.Array, de: int) -> jax.Array:
+    """Integer right shift by `de` with round-to-nearest-even (int32 math)."""
+    if de == 0:
+        return p
+    q = p >> de                      # floor division (two's complement)
+    r = p - (q << de)                # remainder in [0, 2^de)
+    half = 1 << (de - 1)
+    round_up = (r > half) | ((r == half) & ((q & 1) == 1))
+    return q + round_up.astype(p.dtype)
+
+
+def ss_mxint(t: MXTensor, low: MXFormat) -> MXTensor:
+    """SSMXINT: right-shift-and-round on integer codes + scale bump."""
+    assert t.fmt.kind == "int" and low.kind == "int"
+    if low.block_size != t.fmt.block_size:
+        raise ValueError("slice-and-scale preserves block size")
+    de = delta_e(t.fmt, low)
+    p = t.codes.astype(jnp.int32)
+    q = _rshift_rne(p, de)
+    maxq = low.int_maxq
+    q = jnp.clip(q, -maxq, maxq).astype(jnp.int8)
+    se = jnp.clip(t.scale_exp.astype(jnp.int32) + de,
+                  SCALE_EXP_MIN, SCALE_EXP_MAX).astype(jnp.int8)
+    return MXTensor(codes=q, scale_exp=se, fmt=low, block_axis=t.block_axis)
+
+
+def ss_mxfp(t: MXTensor, low: MXFormat) -> MXTensor:
+    """SSMXFP: explicit divide + requantize of element values + scale bump."""
+    assert t.fmt.kind == "fp" and low.kind == "fp"
+    if low.block_size != t.fmt.block_size:
+        raise ValueError("slice-and-scale preserves block size")
+    de = delta_e(t.fmt, low)
+    vals = decode_fp(t.codes, t.fmt, jnp.float32)
+    y = vals * _exp2i(jnp.full((), -de, jnp.int32))
+    q = quantize_fp_element_value(y, low)
+    codes = encode_fp(q, low)
+    se = jnp.clip(t.scale_exp.astype(jnp.int32) + de,
+                  SCALE_EXP_MIN, SCALE_EXP_MAX).astype(jnp.int8)
+    return MXTensor(codes=codes, scale_exp=se, fmt=low, block_axis=t.block_axis)
+
+
+def slice_and_scale(t: MXTensor, low: MXFormat) -> MXTensor:
+    """Dispatch SSMXINT / SSMXFP; identity if formats match."""
+    if low.name == t.fmt.name and low.block_size == t.fmt.block_size:
+        return t
+    if t.fmt.kind != low.kind:
+        raise ValueError(
+            f"cannot slice-and-scale across kinds ({t.fmt.name} -> {low.name})")
+    if t.fmt.kind == "int":
+        return ss_mxint(t, low)
+    return ss_mxfp(t, low)
+
+
+def ss_quantize_dequantize(t: MXTensor, low: MXFormat, dtype=jnp.float32):
+    """dequantize(slice_and_scale(t, low)) — runtime target weights W_t."""
+    from repro.core.mx import dequantize
+    return dequantize(slice_and_scale(t, low), dtype=dtype)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticConfig, make_tokens
+from repro.data.pipeline import DataConfig, LMDataset, eval_batches

@@ -1,0 +1,12 @@
+"""repro.kernels — TPU Pallas kernels for the MX hot spots.
+
+Kernels (pl.pallas_call + explicit BlockSpec VMEM tiling):
+  mx_quantize  — block-max + shared-exponent + element cast, fused
+  fake_quant   — QAT forward quant-dequant in one VMEM pass
+  ss_convert   — Slice-and-Scale on packed codes (int shift-RNE / fp requant)
+  mx_matmul    — dequant-fused GEMM over packed MX weights (+ int4-packed)
+
+``ops`` holds the jit'd public wrappers (interpret=True on CPU), ``ref`` the
+pure-jnp oracles every kernel is tested against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

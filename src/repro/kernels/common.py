@@ -1,0 +1,108 @@
+"""Shared in-kernel numerics for the MX Pallas kernels.
+
+Everything here is elementwise / small-reduction VPU math that lowers on TPU:
+bit ops on int32 lanes, float<->int bitcasts, and exact power-of-two
+construction by assembling f32 exponent bits (no transcendental exp2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import MXFormat
+
+
+def pow2i(e: jax.Array) -> jax.Array:
+    """Exact 2^e for integer e in [-126, 127], by building f32 exponent bits.
+
+    e < -126 saturates to 2^-126 (f32 normal min). MX scale exponents of -127
+    only occur for all-zero blocks, whose elements are 0 anyway.
+    """
+    e = jnp.clip(e.astype(jnp.int32), -126, 127)
+    bits = (e + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def f32_exponent(a: jax.Array) -> jax.Array:
+    """floor(log2(a)) for positive normal f32 a, from the exponent bits."""
+    bits = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def decode_fp_arith(codes: jax.Array, fmt: MXFormat) -> jax.Array:
+    """MXFP uint8 bit patterns -> f32 values (arithmetic, no LUT).
+
+    Valid codes only (the E4M3 NaN pattern is never produced by our
+    quantizers; it decodes here as 480, and to NaN in the core LUT).
+    """
+    c = codes.astype(jnp.int32)
+    s = (c >> (fmt.bits - 1)) & 1
+    e = (c >> fmt.mbits) & ((1 << fmt.ebits) - 1)
+    m = c & ((1 << fmt.mbits) - 1)
+    mf = m.astype(jnp.float32) * (2.0 ** -fmt.mbits)
+    normal = e > 0
+    mag = jnp.where(normal,
+                    (1.0 + mf) * pow2i(e - fmt.fp_bias),
+                    mf * (2.0 ** fmt.emin))
+    return jnp.where(s == 1, -mag, mag)
+
+
+def quantize_fp_value_arith(y: jax.Array, fmt: MXFormat) -> jax.Array:
+    """Round f32 -> nearest MXFP(η,μ) value, saturating (kernel-safe)."""
+    a = jnp.abs(y)
+    expo = jnp.maximum(f32_exponent(jnp.where(a > 0, a, 1.0)), fmt.emin)
+    quantum = pow2i(expo - fmt.mbits)
+    q = jnp.round(y / quantum) * quantum
+    q = jnp.clip(q, -fmt.fp_max, fmt.fp_max)
+    return jnp.where(a > 0, q, jnp.zeros_like(q))
+
+
+def encode_fp_arith(q: jax.Array, fmt: MXFormat) -> jax.Array:
+    """Exactly-representable MXFP values -> uint8 bit patterns (kernel-safe)."""
+    qbits = jax.lax.bitcast_convert_type(q.astype(jnp.float32), jnp.int32)
+    s = (qbits >> 31) & 1                      # preserves the sign of -0.0
+    a = jnp.abs(q)
+    expo = f32_exponent(jnp.where(a > 0, a, 1.0))
+    is_sub = (expo < fmt.emin) | (a <= 0)
+    mant_n = jnp.round((a * pow2i(-expo) - 1.0) * (1 << fmt.mbits))
+    mant_s = jnp.round(a * pow2i(jnp.full_like(expo, fmt.mbits - fmt.emin)))
+    e_field = jnp.where(is_sub, 0, expo + fmt.fp_bias).astype(jnp.int32)
+    mant = jnp.where(is_sub, mant_s, mant_n).astype(jnp.int32)
+    code = (s << (fmt.bits - 1)) | (e_field << fmt.mbits) | mant
+    return code.astype(jnp.uint8)
+
+
+def quantize_block_tile(v: jax.Array, fmt: MXFormat):
+    """Quantize a (TM, TC) f32 tile; blocks of fmt.block_size along axis 1.
+
+    Returns (codes int8/uint8 (TM, TC), scale_exp int8 (TM, TC//bs)).
+    """
+    bs = fmt.block_size
+    tm, tc = v.shape
+    vb = v.reshape(tm, tc // bs, bs)
+    bmax = jnp.max(jnp.abs(vb), axis=-1)
+    se = jnp.where(bmax > 0,
+                   f32_exponent(jnp.where(bmax > 0, bmax, 1.0)),
+                   -127 + fmt.emax) - fmt.emax
+    se = jnp.clip(se, -127, 127)
+    y = vb * pow2i(-se)[:, :, None]
+    if fmt.kind == "int":
+        maxq = float(fmt.int_maxq)
+        codes = jnp.clip(jnp.round(y), -maxq, maxq).astype(jnp.int8)
+    else:
+        codes = encode_fp_arith(quantize_fp_value_arith(y, fmt), fmt)
+    return codes.reshape(tm, tc), se.astype(jnp.int8)
+
+
+def dequantize_block_tile(codes: jax.Array, scale_exp: jax.Array,
+                          fmt: MXFormat) -> jax.Array:
+    """Inverse of quantize_block_tile -> f32 (TM, TC)."""
+    bs = fmt.block_size
+    tm, tc = codes.shape
+    if fmt.kind == "int":
+        vals = codes.astype(jnp.float32)
+    else:
+        vals = decode_fp_arith(codes, fmt)
+    scale = pow2i(scale_exp.astype(jnp.int32))
+    vb = vals.reshape(tm, tc // bs, bs) * scale[:, :, None]
+    return vb.reshape(tm, tc)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: dequant-fused GEMM over packed MX weights.
+
+The elastic-inference hot loop: activations stay bf16, weights stream from
+HBM as int8/uint8 element codes (or int4 nibble-packed) plus E8M0 scales.
+Each grid step loads a (TK, TN) weight tile into VMEM, dequantizes on the VPU,
+and feeds the MXU with a (TM, TK) x (TK, TN) bf16 matmul accumulated in f32.
+
+HBM traffic per weight tile is bits/16 of the bf16 equivalent — this is where
+MX serving wins, since decode-mode GEMMs are memory-bound.
+
+Layouts:
+  - unpacked: codes (K, N), scales (K/bs, N); MX blocks along K (contraction).
+  - int4 split-N packed: packed (K, N/2) uint8 where column j carries output
+    column j in the low nibble and column j + N/2 in the high nibble. Output
+    tiles never straddle the halves, so the nibble choice is a scalar per
+    grid step (no lane interleaving).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import MXFormat
+from repro.kernels.common import decode_fp_arith, pow2i
+
+
+def _dequant_tile(codes, scales, fmt: MXFormat):
+    """codes (TK, TN), scales (TK/bs, TN) -> w (TK, TN) f32. Blocks along K."""
+    tk, tn = codes.shape
+    bs = fmt.block_size
+    if fmt.kind == "int":
+        vals = codes.astype(jnp.float32)
+    else:
+        vals = decode_fp_arith(codes, fmt)
+    scale = pow2i(scales.astype(jnp.int32))          # (TK/bs, TN)
+    scale_full = jnp.repeat(scale, bs, axis=0)       # (TK, TN)
+    del tk, tn
+    return vals * scale_full
+
+
+def _mm_kernel(x_ref, codes_ref, scales_ref, out_ref, *, fmt: MXFormat):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = _dequant_tile(codes_ref[...], scales_ref[...], fmt)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def mx_matmul_pallas(x: jax.Array, codes: jax.Array, scale_exp: jax.Array,
+                     fmt: MXFormat, *, tm: int, tn: int, tk: int,
+                     interpret: bool = False) -> jax.Array:
+    """x (M, K) @ dequant(codes (K, N), scales (K/bs, N)) -> (M, N) f32."""
+    m, k = x.shape
+    k2, n = codes.shape
+    bs = fmt.block_size
+    assert k == k2 and m % tm == 0 and n % tn == 0 and k % tk == 0
+    assert tk % bs == 0
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, fmt=fmt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tk // bs, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scale_exp)
+
+
+# =============================================================================
+# int4 split-N packed variant
+# =============================================================================
+def pack_int4_splitn(codes: jax.Array) -> jax.Array:
+    """int8 codes (K, N) -> uint8 packed (K, N/2), split-N layout."""
+    k, n = codes.shape
+    assert n % 2 == 0
+    half = n // 2
+    lo = (codes[:, :half].astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    hi = (codes[:, half:].astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def _mm4_kernel(x_ref, packed_ref, scales_ref, out_ref, *,
+                fmt: MXFormat, half_blocks: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    j = pl.program_id(1)
+    p = packed_ref[...].astype(jnp.int32)
+    lo = ((p & 0xF) ^ 8) - 8
+    hi = (((p >> 4) & 0xF) ^ 8) - 8
+    codes = jnp.where(j < half_blocks, lo, hi)
+    w = _dequant_tile(codes, scales_ref[...], fmt)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def mx_matmul_int4_pallas(x: jax.Array, packed: jax.Array,
+                          scale_exp: jax.Array, fmt: MXFormat, *,
+                          tm: int, tn: int, tk: int,
+                          interpret: bool = False) -> jax.Array:
+    """x (M, K) @ dequant(int4-packed (K, N/2), scales (K/bs, N)) -> (M, N)."""
+    m, k = x.shape
+    k2, half_n = packed.shape
+    n = half_n * 2
+    bs = fmt.block_size
+    assert fmt.kind == "int" and fmt.bits == 4
+    assert k == k2 and m % tm == 0 and k % tk == 0 and tk % bs == 0
+    assert half_n % tn == 0, "tile must not straddle the packed halves"
+    half_blocks = half_n // tn
+    grid = (m // tm, n // tn, k // tk)
+
+    def packed_idx(i, j, kk):
+        return (kk, jnp.where(j < half_blocks, j, j - half_blocks))
+
+    return pl.pallas_call(
+        functools.partial(_mm4_kernel, fmt=fmt, half_blocks=half_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), packed_idx),
+            pl.BlockSpec((tk // bs, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, packed, scale_exp)

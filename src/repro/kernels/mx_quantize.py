@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: block-wise MX quantization (codes + E8M0 scales).
+
+Tiling: grid over (rows/TM, cols/TC); each step loads a (TM, TC) f32 tile
+HBM->VMEM, computes per-32(block)-column max, assembles the shared exponent,
+casts elements, and writes int8 codes + int8 scales. TC is a multiple of the
+scaling block size and of 128 (lane width) so the MXU/VPU see aligned tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import MXFormat
+from repro.kernels.common import quantize_block_tile
+
+
+def _kernel(v_ref, codes_ref, scales_ref, *, fmt: MXFormat):
+    codes, scales = quantize_block_tile(v_ref[...].astype(jnp.float32), fmt)
+    codes_ref[...] = codes.astype(codes_ref.dtype)
+    scales_ref[...] = scales
+
+
+def mx_quantize_pallas(v: jax.Array, fmt: MXFormat, *, tm: int, tc: int,
+                       interpret: bool = False):
+    """v (R, C) f32/bf16 -> (codes (R, C), scale_exp (R, C/bs)) int8."""
+    r, c = v.shape
+    bs = fmt.block_size
+    assert c % tc == 0 and r % tm == 0 and tc % bs == 0, (r, c, tm, tc, bs)
+    code_dtype = jnp.int8 if fmt.kind == "int" else jnp.uint8
+    grid = (r // tm, c // tc)
+    return pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, tc), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((tm, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tc // bs), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), code_dtype),
+            jax.ShapeDtypeStruct((r, c // bs), jnp.int8),
+        ],
+        interpret=interpret,
+    )(v)

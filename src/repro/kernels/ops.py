@@ -1,0 +1,164 @@
+"""Public jit'd wrappers for the MX Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes exactly as written, which is how we validate TPU-target
+code here. On TPU the same calls lower to Mosaic.
+
+All wrappers accept arbitrary leading dims and an arbitrary block axis; they
+canonicalize to a 2D (rows, block-cols) view before tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import MXFormat
+from repro.core.mx import MXTensor
+from repro.kernels import fake_quant as _fq
+from repro.kernels import mx_matmul as _mm
+from repro.kernels import mx_quantize as _mq
+from repro.kernels import ss_convert as _ss
+
+
+def _use_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() == "cpu"
+
+
+def _pick_tile(n: int, target: int, multiple: int) -> int:
+    """Largest divisor of n that is <= target and a multiple of `multiple`."""
+    best = multiple
+    t = multiple
+    while t <= min(n, target):
+        if n % t == 0:
+            best = t
+        t += multiple
+    return best
+
+
+def _as2d(v: jax.Array, axis: int):
+    """Move `axis` last and flatten the rest -> (R, C); returns unflatteners.
+
+    ``restore`` undoes the move (for element codes); ``restore_blocked``
+    keeps the moved-last ("blocked") layout that MXTensor uses for scales.
+    """
+    axis = axis % v.ndim
+    moved = jnp.moveaxis(v, axis, -1)
+    lead = moved.shape[:-1]
+    c = moved.shape[-1]
+    r = 1
+    for d in lead:
+        r *= int(d)
+    flat = moved.reshape(r, c)
+
+    def restore(x):
+        return jnp.moveaxis(x.reshape(*lead, c), -1, axis)
+
+    def restore_blocked(x, last_dim):
+        return x.reshape(*lead, last_dim)
+
+    return flat, restore, restore_blocked
+
+
+def _tiles(r: int, c: int, bs: int):
+    tm = _pick_tile(r, 256, 8) if r % 8 == 0 else _pick_tile(r, 256, 1)
+    tc = _pick_tile(c, 512, bs)
+    return tm, tc
+
+
+# =============================================================================
+@functools.partial(jax.jit, static_argnames=("fmt", "axis", "interpret"))
+def mx_quantize(v: jax.Array, fmt: MXFormat, axis: int = -1,
+                interpret: bool | None = None) -> MXTensor:
+    """Pallas-backed MX quantization -> MXTensor (same API as core.quantize)."""
+    interp = _use_interpret(interpret)
+    flat, restore, restore_blocked = _as2d(v, axis)
+    r, c = flat.shape
+    tm, tc = _tiles(r, c, fmt.block_size)
+    codes, scales = _mq.mx_quantize_pallas(flat, fmt, tm=tm, tc=tc,
+                                           interpret=interp)
+    return MXTensor(codes=restore(codes),
+                    scale_exp=restore_blocked(scales, c // fmt.block_size),
+                    fmt=fmt, block_axis=axis % v.ndim)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "axis", "interpret"))
+def fake_quant(v: jax.Array, fmt: MXFormat, axis: int = -1,
+               interpret: bool | None = None) -> jax.Array:
+    """Pallas-backed fused quant-dequant (QAT forward weight)."""
+    interp = _use_interpret(interpret)
+    flat, restore, _ = _as2d(v, axis)
+    r, c = flat.shape
+    tm, tc = _tiles(r, c, fmt.block_size)
+    out = _fq.fake_quant_pallas(flat, fmt, tm=tm, tc=tc, interpret=interp)
+    return restore(out)
+
+
+@functools.partial(jax.jit, static_argnames=("low", "interpret"))
+def ss_convert(t: MXTensor, low: MXFormat,
+               interpret: bool | None = None) -> MXTensor:
+    """Pallas-backed Slice-and-Scale on packed representations."""
+    interp = _use_interpret(interpret)
+    high = t.fmt
+    flat_c, restore_c, _ = _as2d(t.codes, t.block_axis)
+    # scale_exp is already in blocked (moved-last) layout
+    s_shape = t.scale_exp.shape
+    flat_s = t.scale_exp.reshape(-1, s_shape[-1])
+    r, c = flat_c.shape
+    tm, tc = _tiles(r, c, high.block_size)
+    codes, scales = _ss.ss_convert_pallas(flat_c, flat_s, high, low,
+                                          tm=tm, tc=tc, interpret=interp)
+    return MXTensor(codes=restore_c(codes), scale_exp=scales.reshape(s_shape),
+                    fmt=low, block_axis=t.block_axis)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "interpret", "tm", "tn", "tk"))
+def mx_matmul(x: jax.Array, codes: jax.Array, scale_exp: jax.Array,
+              fmt: MXFormat, interpret: bool | None = None,
+              tm: int | None = None, tn: int | None = None,
+              tk: int | None = None) -> jax.Array:
+    """x (M,K) @ MX-packed W (K,N): dequant-fused GEMM."""
+    interp = _use_interpret(interpret)
+    m, k = x.shape
+    n = codes.shape[1]
+    tm = tm or _pick_tile(m, 256, 8)
+    tn = tn or _pick_tile(n, 256, 128 if n % 128 == 0 else 8)
+    tk = tk or _pick_tile(k, 512, fmt.block_size)
+    return _mm.mx_matmul_pallas(x, codes, scale_exp, fmt,
+                                tm=tm, tn=tn, tk=tk, interpret=interp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "interpret", "tm", "tn", "tk"))
+def mx_matmul_int4(x: jax.Array, packed: jax.Array, scale_exp: jax.Array,
+                   fmt: MXFormat, interpret: bool | None = None,
+                   tm: int | None = None, tn: int | None = None,
+                   tk: int | None = None) -> jax.Array:
+    """x (M,K) @ int4-split-N-packed W (K,N/2): half the weight HBM bytes."""
+    interp = _use_interpret(interpret)
+    m, k = x.shape
+    half_n = packed.shape[1]
+    tm = tm or _pick_tile(m, 256, 8)
+    tn = tn or _pick_tile(half_n, 256, 128 if half_n % 128 == 0 else 8)
+    tk = tk or _pick_tile(k, 512, fmt.block_size)
+    return _mm.mx_matmul_int4_pallas(x, packed, scale_exp, fmt,
+                                     tm=tm, tn=tn, tk=tk, interpret=interp)
+
+
+pack_int4_splitn = _mm.pack_int4_splitn
+
+
+def to_weight_layout(t: MXTensor):
+    """Core MXTensor (2D, blocks along axis 0 = K) -> kernel weight layout.
+
+    Returns (codes (K, N), scale_exp (K/bs, N)). Core stores scales in the
+    blocked (moved-last) layout (N, K/bs); the GEMM kernel tiles scales
+    alongside the weight, so it wants them K-major.
+    """
+    assert t.codes.ndim == 2 and t.block_axis == 0, (t.codes.shape,
+                                                     t.block_axis)
+    return t.codes, t.scale_exp.T

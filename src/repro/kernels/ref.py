@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These delegate to ``repro.core`` (which is itself pure jnp) so the kernels are
+validated against the exact semantics the rest of the framework uses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.formats import MXFormat
+from repro.core import mx as _mx
+from repro.core import slice_scale as _ss
+
+
+def ref_mx_quantize(v, fmt: MXFormat, axis: int = -1):
+    """-> (codes, scale_exp) exactly as core.mx.quantize."""
+    t = _mx.quantize(v, fmt, axis=axis)
+    return t.codes, t.scale_exp
+
+
+def ref_fake_quant(v, fmt: MXFormat, axis: int = -1):
+    """-> dequantize(quantize(v)) values (the QAT forward weight)."""
+    return _mx.quantize_dequantize(v, fmt, axis=axis)
+
+
+def ref_ss_convert(codes, scale_exp, high: MXFormat, low: MXFormat,
+                   block_axis: int = -1):
+    """-> (codes_low, scale_exp_low) via core slice-and-scale."""
+    t = _mx.MXTensor(codes=codes, scale_exp=scale_exp, fmt=high,
+                     block_axis=block_axis % codes.ndim)
+    out = _ss.slice_and_scale(t, low)
+    return out.codes, out.scale_exp
+
+
+def ref_mx_matmul(x, codes, scale_exp, fmt: MXFormat, out_dtype=jnp.float32):
+    """x (M,K) @ dequant(codes (K,N), scale_exp (K/bs, N)) -> (M,N).
+
+    Weight blocks run along K (the contraction axis), per OCP MX dot-product
+    semantics. Scales use the kernel layout: K-major, (K/bs, N).
+    """
+    vals = _mx.decode_elements(codes, fmt, jnp.float32)
+    scale = jnp.exp2(scale_exp.astype(jnp.float32))
+    w = vals * jnp.repeat(scale, fmt.block_size, axis=0)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def ref_mx_matmul_int4_packed(x, packed, scale_exp, fmt: MXFormat,
+                              out_dtype=jnp.float32):
+    """Split-N int4-packed weights: packed (K, N/2) uint8.
+
+    Column j of `packed` holds code column j in the low nibble and column
+    j + N/2 in the high nibble (no lane interleaving on TPU).
+    """
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    lo = (lo ^ 8) - 8
+    hi = (hi ^ 8) - 8
+    codes = jnp.concatenate([lo, hi], axis=1).astype(jnp.int8)
+    return ref_mx_matmul(x, codes, scale_exp, fmt, out_dtype)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: Slice-and-Scale format conversion on packed MX data.
+
+SSMXINT (paper Eq. 4) is a pure-integer right-shift with round-to-nearest-even
+on int8 lanes plus a scalar bump of the E8M0 scale — the kernel never touches
+FP32 master weights, which is the point of the paper's deployment pipeline.
+SSMXFP (Eq. 6) decodes elements arithmetically, divides by 2^Δe, re-rounds
+into the narrower element format, and re-encodes — all elementwise VPU math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import MXFormat, SCALE_EXP_MAX, SCALE_EXP_MIN, delta_e
+from repro.kernels.common import (decode_fp_arith, encode_fp_arith,
+                                  pow2i, quantize_fp_value_arith)
+
+
+def _rshift_rne_i32(p, de: int):
+    if de == 0:
+        return p
+    q = p >> de
+    r = p - (q << de)
+    half = 1 << (de - 1)
+    return q + ((r > half) | ((r == half) & ((q & 1) == 1))).astype(p.dtype)
+
+
+def _kernel(codes_ref, scales_ref, out_codes_ref, out_scales_ref, *,
+            high: MXFormat, low: MXFormat):
+    de = delta_e(high, low)
+    if high.kind == "int":
+        p = codes_ref[...].astype(jnp.int32)
+        q = _rshift_rne_i32(p, de)
+        maxq = low.int_maxq
+        out_codes_ref[...] = jnp.clip(q, -maxq, maxq).astype(jnp.int8)
+    else:
+        vals = decode_fp_arith(codes_ref[...], high)
+        y = vals * pow2i(jnp.full((), -de, jnp.int32))
+        out_codes_ref[...] = encode_fp_arith(
+            quantize_fp_value_arith(y, low), low)
+    se = scales_ref[...].astype(jnp.int32) + de
+    out_scales_ref[...] = jnp.clip(se, SCALE_EXP_MIN, SCALE_EXP_MAX) \
+        .astype(jnp.int8)
+
+
+def ss_convert_pallas(codes: jax.Array, scale_exp: jax.Array,
+                      high: MXFormat, low: MXFormat, *, tm: int, tc: int,
+                      interpret: bool = False):
+    """(codes (R,C), scales (R,C/bs)) in `high` -> same shapes in `low`."""
+    r, c = codes.shape
+    bs = high.block_size
+    assert c % tc == 0 and r % tm == 0 and tc % bs == 0
+    out_dtype = jnp.int8 if low.kind == "int" else jnp.uint8
+    grid = (r // tm, c // tc)
+    return pl.pallas_call(
+        functools.partial(_kernel, high=high, low=low),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tc // bs), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tc // bs), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), out_dtype),
+            jax.ShapeDtypeStruct((r, c // bs), jnp.int8),
+        ],
+        interpret=interpret,
+    )(codes, scale_exp)

@@ -1,0 +1,24 @@
+"""Production mesh definitions (TPU v5e numbers; CPU placeholders in dry-run).
+
+``make_production_mesh`` is a function (never a module-level constant) so that
+importing this module does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,14 @@
+"""Model zoo: one scan-based stack per family, MF-QAT plumbed everywhere."""
+from typing import Optional
+
+from repro.core.qat import QATConfig
+from repro.models.common import ModelConfig, QuantCtx
+from repro.models.transformer import ModelApi
+
+
+def get_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        return encdec.make_model(cfg, qat)
+    from repro.models import transformer
+    return transformer.make_model(cfg, qat)

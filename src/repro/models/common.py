@@ -1,0 +1,191 @@
+"""Shared model infrastructure: configs, quantization context, param helpers.
+
+Models are pure functions over nested-dict param pytrees. Every matmul weight
+flows through ``QuantCtx.dense`` which injects MF-QAT fake-quantization (STE)
+when enabled — this is where the paper's technique plugs into every
+architecture. Block axis = 0 (the contraction dim of our (d_in, d_out)
+weights), matching OCP MX dot-product blocking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qat import QATConfig
+from repro.sharding.rules import shard_act
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (one instance per assigned arch)."""
+
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    sliding_window: Optional[int] = None
+    norm_eps: float = 1e-5
+    act: str = "swiglu"             # swiglu | gelu
+    tie_embeddings: bool = False
+    # MoE
+    moe_experts: int = 0
+    moe_topk: int = 2
+    moe_every: int = 1              # MoE at layers where i % moe_every == moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # Hybrid (jamba): attention at layers where i % attn_every == attn_offset
+    attn_every: int = 0             # 0 -> attention everywhere
+    attn_offset: int = 0
+    # Mamba
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0          # 0 -> ceil(d_model / 16)
+    # RWKV
+    rwkv_head_dim: int = 64
+    # Encoder-decoder
+    enc_layers: int = 0
+    # Modality frontend stubs
+    vision_tokens: int = 0          # llava anyres patch embeds
+    audio_downsample: int = 0       # seamless: enc frames = seq // this
+    # Numerics / misc
+    compute_dtype: Any = jnp.bfloat16
+    scan_group: int = 1             # layers per scan step (jamba period = 8)
+    seq_chunk: int = 1024           # flash-attention / loss chunking
+    flash_vjp: bool = True          # custom-VJP flash (O(S) bwd memory)
+    seq_sharding: bool = False      # sequence-parallel residual stream (SP)
+    remat: bool = True
+    remat_inner: bool = False       # also remat each layer inside a group
+    #                                 (peak bwd mem = 1 layer, not the group)
+    unroll: bool = False            # python-loop layers (cost-model calib)
+    max_seq: int = 8192             # rope table sizing hint (not a hard cap)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.scan_group == 0
+        return self.n_layers // self.scan_group
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family in ("ssm",):
+            return False
+        if self.attn_every <= 0:
+            return True
+        return i % self.attn_every == self.attn_offset
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe_experts <= 0:
+            return False
+        return i % self.moe_every == self.moe_offset
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or max(1, -(-self.d_model // 16))
+
+
+def _maybe_dequant_packed(w, dtype):
+    """Dequantize packed-MX weight containers at their point of use.
+
+    Containers sliced out of a scan keep stale static `block_axis` metadata;
+    the contraction dim is always ndim-2 by our stacking convention, so it is
+    re-derived here.
+    """
+    from repro.core.mx import MXTensor, dequantize
+    if isinstance(w, MXTensor):
+        t = MXTensor(codes=w.codes, scale_exp=w.scale_exp, fmt=w.fmt,
+                     block_axis=max(w.codes.ndim - 2, 0))
+        return dequantize(t, dtype=dtype)
+    try:
+        from repro.serve.packed_params import PackedInt4Leaf, unpack_leaf_int4
+        if isinstance(w, PackedInt4Leaf):
+            from repro.core.packed import unpack_int4_jnp
+            codes = unpack_int4_jnp(w.packed)
+            codes = jnp.moveaxis(codes, -1, max(codes.ndim - 2, 0))
+            t_fmt_axis = max(codes.ndim - 2, 0)
+            from repro.core.formats import get_format
+            from repro.core.mx import MXTensor as _MXT, dequantize as _dq
+            t = _MXT(codes=codes, scale_exp=w.scale_exp,
+                     fmt=get_format(w.fmt_name), block_axis=t_fmt_axis)
+            return _dq(t, dtype=dtype)
+    except ImportError:
+        pass
+    return w
+
+
+@dataclasses.dataclass
+class QuantCtx:
+    """Threads the MF-QAT config + traced format index through the forward.
+
+    fmt_idx semantics (see fake_quant_switch): 0..len(formats)-1 selects a
+    training format, len(formats) selects the FP pass-through branch.
+    """
+
+    qat: Optional[QATConfig] = None
+    fmt_idx: Optional[jax.Array] = None
+
+    def maybe_quant(self, w: jax.Array, name: str) -> jax.Array:
+        if self.qat is None or not self.qat.enabled or self.fmt_idx is None:
+            return w
+        return self.qat.apply(w, name, self.fmt_idx)
+
+    def dense(self, x: jax.Array, w, name: str,
+              b: Optional[jax.Array] = None,
+              out_logical: Optional[Tuple] = None) -> jax.Array:
+        """y = x @ fake_quant(w) in the compute dtype.
+
+        `w` may be a packed-MX container (MXTensor / PackedInt4Leaf): then it
+        is dequantized right here — inside the layer scan — so only one
+        layer's bf16 weights are ever resident (the XLA-level analogue of
+        the Pallas dequant-fused GEMM contract; see serve/packed_params.py).
+        """
+        w = _maybe_dequant_packed(w, x.dtype)
+        wq = self.maybe_quant(w, name).astype(x.dtype)
+        y = jax.lax.dot_general(x, wq, (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=x.dtype)
+        if b is not None:
+            y = y + b.astype(x.dtype)
+        if out_logical is not None:
+            y = shard_act(y, out_logical)
+        return y
+
+
+NO_QUANT = QuantCtx()
+
+
+# =============================================================================
+# Param init helpers
+# =============================================================================
+def trunc_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def stacked_init(fn, key, n: int):
+    """vmap an init over a leading layer/group dimension."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))

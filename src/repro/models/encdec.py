@@ -1,0 +1,256 @@
+"""Encoder-decoder LM (seamless-m4t-large-v2 backbone).
+
+Speech frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d). 24-layer bidirectional encoder +
+24-layer causal decoder with cross-attention; both stacks scan over layers.
+The decoder serve path caches self-attention K/V and the (static) per-layer
+cross-attention K/V computed once from the encoder memory at prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qat import QATConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.common import ModelConfig, QuantCtx, stacked_init, trunc_normal
+from repro.sharding.rules import shard_act
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"mixer_norm": jnp.ones((cfg.d_model,)),
+            "attn": T._init_attn(k1, cfg),
+            "ffn_norm": jnp.ones((cfg.d_model,)),
+            "mlp": T._init_mlp(k2, cfg)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"self_norm": jnp.ones((cfg.d_model,)),
+            "self_attn": T._init_attn(k1, cfg),
+            "cross_norm": jnp.ones((cfg.d_model,)),
+            "cross_attn": T._init_attn(k2, cfg),
+            "ffn_norm": jnp.ones((cfg.d_model,)),
+            "mlp": T._init_mlp(k3, cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    ke, kd, kemb, kh = jax.random.split(key, 4)
+    return {
+        "embed": trunc_normal(kemb, (cfg.vocab, cfg.d_model)),
+        "encoder": {
+            "blocks": [stacked_init(lambda k: _init_enc_layer(k, cfg), ke,
+                                    cfg.enc_layers)],
+            "final_norm": jnp.ones((cfg.d_model,)),
+        },
+        "decoder": {
+            "blocks": [stacked_init(lambda k: _init_dec_layer(k, cfg), kd,
+                                    cfg.n_layers)],
+            "final_norm": jnp.ones((cfg.d_model,)),
+        },
+        "lm_head": trunc_normal(kh, (cfg.d_model, cfg.vocab)),
+    }
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    def stackax(tree):
+        return jax.tree_util.tree_map(
+            lambda ax: (None,) + ax, tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    enc_layer = {"mixer_norm": (None,), "attn": T._attn_axes(cfg),
+                 "ffn_norm": (None,), "mlp": T._mlp_axes(cfg)}
+    dec_layer = {"self_norm": (None,), "self_attn": T._attn_axes(cfg),
+                 "cross_norm": (None,), "cross_attn": T._attn_axes(cfg),
+                 "ffn_norm": (None,), "mlp": T._mlp_axes(cfg)}
+    return {
+        "embed": ("vocab", "fsdp"),
+        "encoder": {"blocks": [stackax(enc_layer)], "final_norm": (None,)},
+        "decoder": {"blocks": [stackax(dec_layer)], "final_norm": (None,)},
+        "lm_head": ("fsdp", "vocab"),
+    }
+
+
+def _encode(ctx: QuantCtx, params, cfg: ModelConfig, frames):
+    x = frames.astype(cfg.compute_dtype)
+    x = shard_act(x, ("batch", None, None))
+    b, se, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+
+    def body(xv, p):
+        h = L.rms_norm(xv, p["mixer_norm"], cfg.norm_eps)
+        out, _ = L.attention_block(ctx, h, p["attn"], cfg, positions,
+                                   "enc.attn", causal=False)
+        xv = xv + out
+        h = L.rms_norm(xv, p["ffn_norm"], cfg.norm_eps)
+        return xv + L.mlp_block(ctx, h, p["mlp"], cfg, "enc.mlp"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"]["blocks"][0])
+    return L.rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _decode_stack(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
+                  memory=None, cache=None, cache_len=None,
+                  prefill: bool = False):
+    """Decoder stack. In serve mode `cache` carries self K/V + cross K/V."""
+
+    def body(carry, xs):
+        xv = carry
+        p, cs = xs
+        h = L.rms_norm(xv, p["self_norm"], cfg.norm_eps)
+        kv = None
+        if cs is not None and not prefill:
+            kv = (cs["k"], cs["v"])
+        out, new_kv = L.attention_block(ctx, h, p["self_attn"], cfg,
+                                        positions, "dec.self",
+                                        kv_cache=kv, cache_len=cache_len)
+        new_cs: Dict[str, Any] = {}
+        if cs is not None:
+            if prefill:
+                k_new, v_new = new_kv
+                new_cs["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    cs["k"], k_new.astype(cs["k"].dtype), 0, axis=1)
+                new_cs["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    cs["v"], v_new.astype(cs["v"].dtype), 0, axis=1)
+            else:
+                new_cs["k"], new_cs["v"] = new_kv
+        xv = xv + out
+
+        # cross attention
+        h = L.rms_norm(xv, p["cross_norm"], cfg.norm_eps)
+        if cs is not None:
+            ck, cv = cs["ck"], cs["cv"]
+            if prefill:
+                ck, cv = L.cross_kv_from_memory(ctx, memory, p["cross_attn"],
+                                                cfg, "dec.cross")
+            new_cs["ck"], new_cs["cv"] = ck, cv
+        else:
+            ck, cv = L.cross_kv_from_memory(ctx, memory, p["cross_attn"],
+                                            cfg, "dec.cross")
+        b, s, _ = h.shape
+        q = ctx.dense(h, p["cross_attn"]["wq"], "dec.cross.wq") \
+            .reshape(b, s, cfg.n_heads, cfg.hd)
+        if s == 1:
+            se = ck.shape[1]
+            out = L.decode_attention(q, ck, cv,
+                                     jnp.full((b,), se, jnp.int32))
+        else:
+            out = L.flash_attention(q, ck, cv, causal=False,
+                                    chunk=cfg.seq_chunk)
+        out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+        out = ctx.dense(out, p["cross_attn"]["wo"], "dec.cross.wo")
+        xv = xv + out
+
+        h = L.rms_norm(xv, p["ffn_norm"], cfg.norm_eps)
+        xv = xv + L.mlp_block(ctx, h, p["mlp"], cfg, "dec.mlp")
+        return xv, new_cs
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    blocks = params["decoder"]["blocks"][0]
+    if cache is None:
+        x, _ = jax.lax.scan(lambda c, p: (body_fn(c, (p, None))[0], None),
+                            x, blocks)
+        new_cache = None
+    else:
+        x, new_blocks = jax.lax.scan(body_fn, x, (blocks, cache["blocks"][0]))
+        new_cache = {"blocks": [new_blocks]}
+    return L.rms_norm(x, params["decoder"]["final_norm"], cfg.norm_eps), \
+        new_cache
+
+
+def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None):
+    n_fmts = len(qat.formats) if qat else 0
+
+    def _ctx(fmt_idx):
+        if qat is None or not qat.enabled:
+            return QuantCtx()
+        idx = fmt_idx if fmt_idx is not None else jnp.int32(n_fmts)
+        return QuantCtx(qat=qat, fmt_idx=idx)
+
+    def train_loss(params, batch, fmt_idx=None):
+        ctx = _ctx(fmt_idx)
+        memory = _encode(ctx, params, cfg, batch["frame_embeds"])
+        tokens = batch["tokens"]
+        b, st = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0) \
+            .astype(cfg.compute_dtype)
+        x = shard_act(x, ("batch", None, None))
+        positions = jnp.broadcast_to(jnp.arange(st)[None], (b, st))
+        hidden, _ = _decode_stack(ctx, params, cfg, x, positions,
+                                  memory=memory)
+        mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+        loss = T.chunked_ce_loss(ctx, hidden, params["lm_head"],
+                                 batch["labels"],
+                                 mask.astype(jnp.float32), cfg)
+        return loss, {"ce": loss}
+
+    def init_cache(b, s_max, dtype=None, s_enc=None):
+        dtype = dtype or cfg.compute_dtype
+        s_enc = s_enc or max(1, s_max // max(cfg.audio_downsample, 1))
+        blk = {
+            "k": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype),
+            "ck": jnp.zeros((b, s_enc, cfg.n_kv_heads, cfg.hd), dtype),
+            "cv": jnp.zeros((b, s_enc, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+        stack = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+            blk)
+        return {"blocks": [stack]}
+
+    def cache_axes():
+        return {"blocks": [{
+            "k": (None, "batch", "kv_seq", None, None),
+            "v": (None, "batch", "kv_seq", None, None),
+            "ck": (None, "batch", "kv_seq", None, None),
+            "cv": (None, "batch", "kv_seq", None, None),
+        }]}
+
+    def prefill(params, batch, cache):
+        ctx = QuantCtx()   # serving never fake-quantizes
+        memory = _encode(ctx, params, cfg, batch["frame_embeds"])
+        tokens = batch["tokens"]
+        b, st = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0) \
+            .astype(cfg.compute_dtype)
+        positions = jnp.broadcast_to(jnp.arange(st)[None], (b, st))
+        hidden, new_cache = _decode_stack(
+            ctx, params, cfg, x, positions, memory=memory, cache=cache,
+            cache_len=jnp.zeros((b,), jnp.int32), prefill=True)
+        logits = hidden[:, -1].astype(jnp.float32) @ \
+            params["lm_head"].astype(jnp.float32)
+        return logits, new_cache, jnp.full((b,), st, jnp.int32)
+
+    def serve_step(params, batch, cache, cache_len):
+        ctx = QuantCtx()
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens, axis=0) \
+            .astype(cfg.compute_dtype)
+        positions = cache_len[:, None]
+        hidden, new_cache = _decode_stack(
+            ctx, params, cfg, x, positions, cache=cache,
+            cache_len=cache_len, prefill=False)
+        logits = hidden[:, -1].astype(jnp.float32) @ \
+            params["lm_head"].astype(jnp.float32)
+        logits = shard_act(logits, ("batch", "vocab"))
+        return logits, new_cache
+
+    return T.ModelApi(
+        cfg=cfg, qat=qat,
+        init_params=functools.partial(init_params, cfg=cfg),
+        param_axes=functools.partial(param_axes, cfg=cfg),
+        train_loss=train_loss,
+        init_cache=init_cache,
+        cache_axes=cache_axes,
+        prefill=prefill,
+        serve_step=serve_step,
+    )

@@ -1,0 +1,313 @@
+"""Transformer building blocks: norms, RoPE, flash attention, MLP, MoE.
+
+Attention is a chunked flash implementation in pure jnp (online softmax over
+KV chunks, O(S) memory) with optional sliding-window *banding* that slices
+only the needed KV range per query chunk — SWA prefill costs O(S·W) compute,
+not O(S^2). Decode uses a direct single-query path whose reductions partition
+over a sequence-sharded KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, QuantCtx
+from repro.sharding.rules import shard_act
+
+
+# =============================================================================
+# Norms / RoPE
+# =============================================================================
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)) \
+        .astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, -1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, D), positions (..., S) -> rotated (llama half-split)."""
+    d = x.shape[-1]
+    half = d // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# =============================================================================
+# Flash attention (chunked online softmax)
+# =============================================================================
+def _attend_block(q, k, v, q_pos, k_pos, causal, window, scale):
+    """One (cq x ck) score block with masking. q (B,cq,Hkv,G,D)."""
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    return s
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, chunk: int = 1024) -> jax.Array:
+    """q (B,Sq,H,D), k/v (B,Skv,Hkv,D) -> (B,Sq,H,D).
+
+    Scans query chunks (outer) and KV chunks (inner) with a running
+    (max, denom, acc) online softmax. With a sliding window, only the banded
+    KV range [t0-W, t0+cq) is sliced per query chunk.
+    """
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    cq = min(chunk, sq)
+    while sq % cq:
+        cq //= 2
+    cq = max(cq, 1)
+
+    banded = window is not None and causal and skv > window
+    if banded:
+        band = min(skv, window + cq)
+    qg = q.reshape(b, sq, hkv, g, d)
+
+    def q_step(_, qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * cq, cq, axis=1)
+        q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+        if banded:
+            start = jnp.clip(q_offset + qi * cq + cq - band, 0, skv - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            k_pos = start + jnp.arange(band)
+            s = _attend_block(qc, kc, vc, q_pos, k_pos, causal, window, scale)
+            m = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - jax.lax.stop_gradient(m))
+            num = jnp.einsum("bkgqt,btkd->bqkgd", p, vc.astype(jnp.float32))
+            den = jnp.sum(p, axis=-1)                     # (b,hkv,g,cq)
+            out = num / den.transpose(0, 3, 1, 2)[..., None]
+            return None, out.reshape(b, cq, h, d).astype(q.dtype)
+
+        ck = min(chunk, skv)
+        while skv % ck:
+            ck //= 2
+        nk = skv // ck
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=1)
+            k_pos = ki * ck + jnp.arange(ck)
+            s = _attend_block(qc, kc, vc, q_pos, k_pos, causal, window, scale)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p, vc.astype(jnp.float32))
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, cq, h, d)
+        return None, out.astype(q.dtype)
+
+    nq = sq // cq
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-token attention: q (B,1,H,D) over cache (B,Skv,Hkv,D).
+
+    Non-scanned so the softmax reductions partition over a sequence-sharded
+    cache (GSPMD turns them into psums over the `model` axis).
+    """
+    b, _, h, d = q.shape
+    skv, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / (d ** 0.5)
+    pos = jnp.arange(skv)
+    valid = pos[None, :] < cache_len[:, None]                    # (B, Skv)
+    if window is not None:
+        valid &= pos[None, :] >= (cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    den = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkd->bkgd", p / den,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# =============================================================================
+# Attention block
+# =============================================================================
+def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
+                    positions: jax.Array, name: str,
+                    kv_cache: Optional[Tuple] = None,
+                    cache_len: Optional[jax.Array] = None,
+                    cross_kv: Optional[Tuple] = None,
+                    causal: bool = True):
+    """Self- (or cross-) attention. Returns (out, new_kv) where new_kv is the
+    (k, v) tensors produced at this layer (for cache building) or the updated
+    cache in decode mode."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    if cross_kv is None:
+        q = ctx.dense(x, p["wq"], name + ".wq", p.get("bq"))
+        k = ctx.dense(x, p["wk"], name + ".wk", p.get("bk"))
+        v = ctx.dense(x, p["wv"], name + ".wv", p.get("bv"))
+        q = q.reshape(b, s, h, hd)
+        k = k.reshape(b, s, hkv, hd)
+        v = v.reshape(b, s, hkv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        q = shard_act(q, ("batch", None, "heads", None))
+        k = shard_act(k, ("batch", None, "kv_heads", None))
+    else:
+        q = ctx.dense(x, p["wq"], name + ".wq").reshape(b, s, h, hd)
+        k, v = cross_kv
+
+    if kv_cache is not None:
+        # decode: write this token's k/v at cache_len, attend over the cache.
+        # Batch steps are aligned (continuous-batching engine keeps slots in
+        # lockstep per micro-batch), so one scalar write index suffices.
+        kc, vc = kv_cache
+        idx = cache_len[0]
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                 idx, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                 idx, axis=1)
+        out = decode_attention(q, kc, vc, cache_len + 1,
+                               window=cfg.sliding_window)
+        new_kv = (kc, vc)
+    else:
+        if cfg.flash_vjp:
+            from repro.models.flash_vjp import flash_attention_vjp
+            out = flash_attention_vjp(q, k, v, causal=causal,
+                                      window=cfg.sliding_window,
+                                      chunk=cfg.seq_chunk)
+        else:
+            out = flash_attention(q, k, v, causal=causal,
+                                  window=cfg.sliding_window,
+                                  chunk=cfg.seq_chunk)
+        new_kv = (k, v)
+
+    out = out.reshape(b, s, h * hd)
+    out = ctx.dense(out, p["wo"], name + ".wo",
+                    out_logical=("batch", None, None))
+    return out, new_kv
+
+
+def cross_kv_from_memory(ctx: QuantCtx, memory: jax.Array, p, cfg: ModelConfig,
+                         name: str):
+    """Precompute encoder-side K/V for decoder cross-attention."""
+    b, se, _ = memory.shape
+    k = ctx.dense(memory, p["wk"], name + ".wk") \
+        .reshape(b, se, cfg.n_kv_heads, cfg.hd)
+    v = ctx.dense(memory, p["wv"], name + ".wv") \
+        .reshape(b, se, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+# =============================================================================
+# MLP / MoE
+# =============================================================================
+def mlp_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig, name: str):
+    if cfg.act == "swiglu":
+        gate = ctx.dense(x, p["w_gate"], name + ".w_gate",
+                         out_logical=("batch", None, "mlp"))
+        up = ctx.dense(x, p["w_up"], name + ".w_up",
+                       out_logical=("batch", None, "mlp"))
+        hidden = jax.nn.silu(gate) * up
+    else:
+        hidden = jax.nn.gelu(
+            ctx.dense(x, p["w_up"], name + ".w_up", p.get("b_up"),
+                      out_logical=("batch", None, "mlp")))
+    return ctx.dense(hidden, p["w_down"], name + ".w_down", p.get("b_down"),
+                     out_logical=("batch", None, None))
+
+
+def moe_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig, name: str):
+    """Top-k routed MoE with *local* routing groups + capacity dispatch.
+
+    Each batch row routes independently (GShard-style local groups): the
+    top-C gather/scatter stays inside the row's data shard, so sharding the
+    batch over (pod, data) never gathers the global token axis — the only
+    cross-shard traffic is the (E, B, C, d) expert operand transpose, which
+    GSPMD lowers to the expected EP all-to-all when experts divide `model`.
+    Capacity C = cf·S·k/E per row; dropping is by gate magnitude
+    (importance-based). Returns (out, aux_load_balance_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_topk
+
+    logits = ctx.dense(x, p["router"], name + ".router").astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B, S, E)
+    top_vals, top_idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(top_vals, axis=-1)                    # (B, S, k)
+    onehot = jax.nn.one_hot(top_idx, e, dtype=gates.dtype)       # (B, S, k, E)
+    expert_gate = jnp.einsum("bsk,bske->bse", gates, onehot)
+
+    cap = max(1, min(s, int(cfg.capacity_factor * s * k / e)))
+    prio = expert_gate.transpose(0, 2, 1)                        # (B, E, S)
+    top_gate, token_idx = jax.lax.top_k(prio, cap)               # (B, E, C)
+
+    xe = jax.vmap(lambda xb, ib: xb[ib.reshape(-1)].reshape(e, cap, d))(
+        x, token_idx)                                            # (B, E, C, d)
+    xe = xe.transpose(1, 0, 2, 3)                                # (E, B, C, d)
+    xe = shard_act(xe, ("experts", "batch", None, None))
+
+    def expert_ffn(pe, xi):                                      # xi (B, C, d)
+        gate = ctx.dense(xi, pe["w_gate"], name + ".expert.w_gate")
+        up = ctx.dense(xi, pe["w_up"], name + ".expert.w_up")
+        return ctx.dense(jax.nn.silu(gate) * up, pe["w_down"],
+                         name + ".expert.w_down")
+
+    ye = jax.vmap(expert_ffn)(p["experts"], xe)                  # (E, B, C, d)
+    ye = ye * top_gate.transpose(1, 0, 2)[..., None].astype(ye.dtype)
+    ye = ye.transpose(1, 0, 2, 3)                                # (B, E, C, d)
+    ye = shard_act(ye, ("batch", None, None, None))
+
+    def scatter_row(yb, ib):
+        return jnp.zeros((s, d), yb.dtype) \
+            .at[ib.reshape(-1)].add(yb.reshape(e * cap, d))
+
+    out = jax.vmap(scatter_row)(ye, token_idx)                   # (B, S, d)
+
+    # Switch-style load-balance aux loss.
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))           # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.router_aux_coef * e * jnp.sum(frac_tokens * frac_probs)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,127 @@
+"""Mamba-1 selective-SSM block (Jamba's dominant mixer).
+
+Chunked selective scan: Δ/B/C projections are computed for the full sequence
+(small tensors), but the (B, S, d_inner, d_state) discretized operands are
+only materialized one chunk at a time inside a lax.scan with an associative
+scan within the chunk — the TPU-friendly analogue of the fused CUDA kernel's
+SRAM blocking (HBM never sees the expanded state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, QuantCtx, trunc_normal
+
+SCAN_CHUNK = 256
+
+
+def init_mamba_params(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    n, kc, dtr = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.dt_rank
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": trunc_normal(ks[0], (d, 2 * di)),
+        "conv_w": trunc_normal(ks[1], (kc, di), std=0.1),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": trunc_normal(ks[2], (di, dtr + 2 * n)),
+        "dt_w": trunc_normal(ks[3], (dtr, di)),
+        "dt_bias": jnp.full((di,), -4.6),     # softplus^-1(0.01)
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,)),
+        "out_proj": trunc_normal(ks[4], (di, d), std=0.02 / cfg.n_layers ** 0.5),
+    }
+
+
+def mamba_param_axes(cfg: ModelConfig):
+    return {
+        "in_proj": ("fsdp", "model"),
+        "conv_w": (None, "model"),
+        "conv_b": ("model",),
+        "x_proj": ("model", None),
+        "dt_w": (None, "model"),
+        "dt_bias": ("model",),
+        "A_log": ("model", None),
+        "D": ("model",),
+        "out_proj": ("model", "fsdp"),
+    }
+
+
+def _causal_conv1d(x, w, b, conv_state):
+    """Depthwise causal conv along S. x (B,S,di), w (K,di).
+
+    Returns (y, new_conv_state (B,K-1,di))."""
+    kc = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], kc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(kc))
+    return y + b[None, None].astype(y.dtype), xp[:, -(kc - 1):]
+
+
+def _ssm_combine(left, right):
+    (al, bl), (ar, br) = left, right
+    return al * ar, ar * bl + br
+
+
+def selective_scan(dt, a_log, b_in, c_in, xi, h0, chunk=SCAN_CHUNK):
+    """Chunked selective scan.
+
+    dt (B,S,di) f32, a_log (di,N), b_in/c_in (B,S,N), xi (B,S,di).
+    Returns (y (B,S,di), h_final (B,di,N)).
+    """
+    bsz, s, di = dt.shape
+    n = a_log.shape[1]
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (di, N)
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, c, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(dt), to_chunks(b_in), to_chunks(c_in), to_chunks(xi))
+
+    def step(h, inp):
+        dt_c, b_c, c_c, x_c = inp                               # (B,c,...)
+        da = jnp.exp(dt_c[..., None] * a[None, None])           # (B,c,di,N)
+        dbx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]      # (B,c,di,N)
+        aa, bb = jax.lax.associative_scan(_ssm_combine, (da, dbx), axis=1)
+        hs = aa * h[:, None] + bb                               # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, c_c)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None else h0
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s, di)
+    return y, h_final
+
+
+def mamba_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig, name: str,
+                state: Optional[Tuple] = None):
+    """x (B,S,d) -> (out, new_state). state = (h (B,di,N), conv (B,K-1,di))."""
+    h0, conv0 = state if state is not None else (None, None)
+    dtr, n = cfg.dt_rank, cfg.mamba_d_state
+
+    xz = ctx.dense(x, p["in_proj"], name + ".in_proj")
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv1d(xi, p["conv_w"].astype(xi.dtype),
+                                    p["conv_b"], conv0)
+    xi = jax.nn.silu(xi)
+
+    bcd = ctx.dense(xi, p["x_proj"], name + ".x_proj").astype(jnp.float32)
+    dt_lo, b_in, c_in = jnp.split(bcd, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_lo @ p["dt_w"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    y, h = selective_scan(dt, p["A_log"], b_in, c_in,
+                          xi.astype(jnp.float32), h0)
+    y = y + p["D"].astype(jnp.float32)[None, None] * xi.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = ctx.dense(y, p["out_proj"], name + ".out_proj",
+                    out_logical=("batch", None, None))
+    return out, (h, conv_state)

@@ -1,0 +1,520 @@
+"""Generic decoder-only LM covering the dense / MoE / hybrid / SSM families.
+
+One stack implementation serves 8 of the 10 assigned architectures:
+mixtral-8x22b, mixtral-8x7b, jamba-1.5-large, llava backbone, qwen3-4b,
+qwen2-72b, smollm-135m, starcoder2-3b, rwkv6-7b. The layer *pattern* within a
+scan group is static (group size = the arch's period: 1 for homogeneous
+stacks, 8 for Jamba's 1:7 attn:mamba interleave), and parameters are stacked
+over groups so the whole stack lowers as one ``lax.scan`` — compile time and
+HLO size stay flat in depth, which matters at 512 devices.
+
+Entry points: ``train_loss``, ``prefill``, ``serve_step`` (one token against
+a preallocated cache), all QAT-aware via QuantCtx.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qat import QATConfig
+from repro.models import layers as L
+from repro.models import rwkv as R
+from repro.models import ssm as S
+from repro.models.common import (ModelConfig, QuantCtx, stacked_init,
+                                 trunc_normal)
+from repro.sharding.rules import shard_act
+
+
+# =============================================================================
+# Layer-kind plumbing
+# =============================================================================
+def mixer_kind(cfg: ModelConfig, j: int) -> str:
+    """Mixer for in-group position j (pattern is periodic in scan_group)."""
+    if cfg.family == "ssm":
+        return "rwkv"
+    if cfg.is_attn_layer(j):
+        return "attn"
+    return "mamba"
+
+
+def ffn_kind(cfg: ModelConfig, j: int) -> str:
+    if cfg.family == "ssm":
+        return "cmix"
+    return "moe" if cfg.is_moe_layer(j) else "mlp"
+
+
+# =============================================================================
+# Init
+# =============================================================================
+def _init_attn(key, cfg: ModelConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": trunc_normal(ks[0], (d, h * hd)),
+        "wk": trunc_normal(ks[1], (d, hkv * hd)),
+        "wv": trunc_normal(ks[2], (d, hkv * hd)),
+        "wo": trunc_normal(ks[3], (h * hd, d), std=0.02 / cfg.n_layers ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((h * hd,)), bk=jnp.zeros((hkv * hd,)),
+                 bv=jnp.zeros((hkv * hd,)))
+    if cfg.qk_norm:
+        p.update(q_norm=jnp.ones((hd,)), k_norm=jnp.ones((hd,)))
+    return p
+
+
+def _attn_axes(cfg: ModelConfig):
+    p = {"wq": ("fsdp", "model"), "wk": ("fsdp", "model"),
+         "wv": ("fsdp", "model"), "wo": ("model", "fsdp")}
+    if cfg.qkv_bias:
+        p.update(bq=("model",), bk=("model",), bv=("model",))
+    if cfg.qk_norm:
+        p.update(q_norm=(None,), k_norm=(None,))
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    down_std = 0.02 / cfg.n_layers ** 0.5
+    if cfg.act == "swiglu":
+        p = {"w_gate": trunc_normal(ks[0], (d, f)),
+             "w_up": trunc_normal(ks[1], (d, f)),
+             "w_down": trunc_normal(ks[2], (f, d), std=down_std)}
+    else:
+        p = {"w_up": trunc_normal(ks[0], (d, f)),
+             "w_down": trunc_normal(ks[1], (f, d), std=down_std)}
+    if cfg.mlp_bias:
+        p.update(b_up=jnp.zeros((f,)), b_down=jnp.zeros((d,)))
+    return p
+
+
+def _mlp_axes(cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        p = {"w_gate": ("fsdp", "mlp"), "w_up": ("fsdp", "mlp"),
+             "w_down": ("mlp", "fsdp")}
+    else:
+        p = {"w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp")}
+    if cfg.mlp_bias:
+        p.update(b_up=("mlp",), b_down=(None,))
+    return p
+
+
+def _init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 4)
+    down_std = 0.02 / cfg.n_layers ** 0.5
+
+    def one_expert(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"w_gate": trunc_normal(k1, (d, f)),
+                "w_up": trunc_normal(k2, (d, f)),
+                "w_down": trunc_normal(k3, (f, d), std=down_std)}
+
+    return {"router": trunc_normal(ks[0], (d, e)),
+            "experts": stacked_init(one_expert, ks[1], e)}
+
+
+def _moe_axes(cfg: ModelConfig):
+    return {"router": ("fsdp", None),
+            "experts": {"w_gate": ("experts", "fsdp", "mlp"),
+                        "w_up": ("experts", "fsdp", "mlp"),
+                        "w_down": ("experts", "mlp", "fsdp")}}
+
+
+def init_block(key, cfg: ModelConfig, j: int) -> Dict:
+    """One layer (in-group position j)."""
+    kmix, kffn = jax.random.split(key)
+    mk, fk = mixer_kind(cfg, j), ffn_kind(cfg, j)
+    p: Dict[str, Any] = {"mixer_norm": jnp.ones((cfg.d_model,))}
+    if mk == "attn":
+        p["attn"] = _init_attn(kmix, cfg)
+    elif mk == "mamba":
+        p["mamba"] = S.init_mamba_params(kmix, cfg)
+    else:
+        p["rwkv"] = R.init_rwkv_params(kmix, cfg)["time"]
+    if fk != "cmix":
+        p["ffn_norm"] = jnp.ones((cfg.d_model,))
+        p["moe" if fk == "moe" else "mlp"] = \
+            _init_moe(kffn, cfg) if fk == "moe" else _init_mlp(kffn, cfg)
+    else:
+        p["ffn_norm"] = jnp.ones((cfg.d_model,))
+        p["cmix"] = R.init_rwkv_params(kffn, cfg)["channel"]
+    return p
+
+
+def block_axes(cfg: ModelConfig, j: int) -> Dict:
+    mk, fk = mixer_kind(cfg, j), ffn_kind(cfg, j)
+    p: Dict[str, Any] = {"mixer_norm": (None,), "ffn_norm": (None,)}
+    if mk == "attn":
+        p["attn"] = _attn_axes(cfg)
+    elif mk == "mamba":
+        p["mamba"] = S.mamba_param_axes(cfg)
+    else:
+        p["rwkv"] = R.rwkv_param_axes(cfg)["time"]
+    if fk == "moe":
+        p["moe"] = _moe_axes(cfg)
+    elif fk == "mlp":
+        p["mlp"] = _mlp_axes(cfg)
+    else:
+        p["cmix"] = R.rwkv_param_axes(cfg)["channel"]
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    blocks = []
+    bkeys = jax.random.split(k_blocks, cfg.scan_group)
+    for j in range(cfg.scan_group):
+        blocks.append(stacked_init(
+            lambda k, j=j: init_block(k, cfg, j), bkeys[j], cfg.n_groups))
+    params = {
+        "embed": trunc_normal(k_embed, (cfg.vocab, cfg.d_model)),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = trunc_normal(k_head, (cfg.d_model, cfg.vocab))
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    def stackax(tree):
+        return jax.tree_util.tree_map(
+            lambda ax: (None,) + ax, tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    axes = {
+        "embed": ("vocab", "fsdp"),
+        "blocks": [stackax(block_axes(cfg, j)) for j in range(cfg.scan_group)],
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("fsdp", "vocab")
+    return axes
+
+
+# =============================================================================
+# Forward
+# =============================================================================
+def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
+           cache_slice, cache_len, prefill: bool):
+    """One block. Returns (x, new_cache_slice)."""
+    mk, fk = mixer_kind(cfg, j), ffn_kind(cfg, j)
+    name = f"blk{j}.{mk}"
+    new_cache: Dict[str, Any] = {}
+    h = L.rms_norm(x, p["mixer_norm"], cfg.norm_eps)
+    if mk == "attn":
+        kv = None
+        if cache_slice is not None and not prefill:
+            kv = (cache_slice["k"], cache_slice["v"])
+        out, new_kv = L.attention_block(
+            ctx, h, p["attn"], cfg, positions, name,
+            kv_cache=kv, cache_len=cache_len)
+        if cache_slice is not None:
+            if prefill:
+                k_new, v_new = new_kv
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    cache_slice["k"], k_new.astype(cache_slice["k"].dtype),
+                    0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    cache_slice["v"], v_new.astype(cache_slice["v"].dtype),
+                    0, axis=1)
+                new_cache = {"k": kc, "v": vc}
+            else:
+                new_cache = {"k": new_kv[0], "v": new_kv[1]}
+    elif mk == "mamba":
+        state = None
+        if cache_slice is not None and not prefill:
+            state = (cache_slice["h"], cache_slice["conv"])
+        out, (hst, conv) = S.mamba_block(ctx, h, p["mamba"], cfg, name,
+                                         state=state)
+        if cache_slice is not None:
+            new_cache = {"h": hst, "conv": conv}
+    else:  # rwkv time mix
+        state = None
+        if cache_slice is not None and not prefill:
+            state = (cache_slice["shift_t"], cache_slice["wkv"])
+        out, (shift_t, wkv) = R.rwkv_time_mix(ctx, h, p["rwkv"], cfg, name,
+                                              state=state)
+        if cache_slice is not None:
+            new_cache = {"shift_t": shift_t, "wkv": wkv}
+    x = x + out
+
+    h = L.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    name_f = f"blk{j}.{fk}"
+    if fk == "mlp":
+        out = L.mlp_block(ctx, h, p["mlp"], cfg, name_f)
+    elif fk == "moe":
+        out, aux = L.moe_block(ctx, h, p["moe"], cfg, name_f)
+    else:
+        state = None
+        if cache_slice is not None and not prefill:
+            state = cache_slice["shift_c"]
+        out, shift_c = R.rwkv_channel_mix(ctx, h, p["cmix"], cfg, name_f,
+                                          state=state)
+        if cache_slice is not None:
+            new_cache["shift_c"] = shift_c
+    x = x + out
+    return x, new_cache, aux
+
+
+def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
+                   cache=None, cache_len=None, prefill: bool = False):
+    """Run the block stack. x (B,S,d). Returns (hidden, new_cache, aux)."""
+    # Sequence-parallel residual: the per-group saved activation (the scan
+    # carry, which dominates train memory at depth) shards its seq dim over
+    # `model` — a Megatron-SP analogue. No-op when seq doesn't divide.
+    resid_axes = ("batch", "seq_sp" if (cfg.seq_sharding and x.shape[1] > 1)
+                  else "seq", None)
+
+    def group_body(carry, xs):
+        xv, aux = carry
+        group_params, group_cache = xs
+        new_slices = []
+        for j in range(cfg.scan_group):
+            cs = group_cache[j] if group_cache is not None else None
+
+            def layer_call(xv_, p_, cs_, _j=j):
+                return _layer(ctx, xv_, p_, cfg, _j, positions, cs_,
+                              cache_len, prefill)
+
+            if cfg.remat_inner and cfg.scan_group > 1:
+                layer_call = jax.checkpoint(
+                    layer_call,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+            xv, nc, a = layer_call(xv, group_params[j], cs)
+            new_slices.append(nc)
+            aux = aux + a
+        xv = shard_act(xv, resid_axes)
+        return (xv, aux), new_slices
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll:
+        # python loop over groups — exact HLO op counts (cost-model calib)
+        carry = (x, jnp.zeros((), jnp.float32))
+        new_blocks = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree_util.tree_map(lambda t: t[g], params["blocks"])
+            gc = jax.tree_util.tree_map(lambda t: t[g], cache["blocks"]) \
+                if cache is not None else None
+            carry, slices = body(carry, (gp, gc))
+            new_blocks.append(slices)
+        (x, aux) = carry
+        if cache is not None:
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_blocks)
+            new_cache = {"blocks": stacked}
+        else:
+            new_cache = None
+    elif cache is None:
+        def body_nc(carry, gp):
+            (xv, aux), ncs = body(carry, (gp, None))
+            return (xv, aux), None
+
+        (x, aux), _ = jax.lax.scan(body_nc, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+        new_cache = None
+    else:
+        (x, aux), new_blocks = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": new_blocks}
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return hidden, new_cache, aux
+
+
+def _embed(params, cfg: ModelConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    return shard_act(x, ("batch", None, None))
+
+
+def _lm_head_w(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_ce_loss(ctx: QuantCtx, hidden, head_w, labels, mask,
+                    cfg: ModelConfig):
+    """Cross entropy over vocab-sharded logits, chunked along seq."""
+    b, s, d = hidden.shape
+    c = min(cfg.seq_chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+
+    def chunk(carry, i):
+        tot, cnt = carry
+        hs = jax.lax.dynamic_slice_in_dim(hidden, i * c, c, axis=1)
+        lb = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        mk = jax.lax.dynamic_slice_in_dim(mask, i * c, c, axis=1)
+        logits = jax.lax.dot_general(
+            hs.astype(jnp.float32), head_w.astype(jnp.float32),
+            (((2,), (0,)), ((), ())))                       # (B,c,V) f32
+        logits = shard_act(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mk
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mk)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(nc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# =============================================================================
+# Model API
+# =============================================================================
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    qat: Optional[QATConfig]
+    init_params: Callable
+    param_axes: Callable
+    train_loss: Callable          # (params, batch, fmt_idx) -> (loss, aux)
+    init_cache: Callable          # (batch, cache_len, dtype) -> cache pytree
+    cache_axes: Callable
+    prefill: Callable             # (params, batch) -> (logits, cache, len)
+    serve_step: Callable          # (params, batch, cache, len) -> (logits, cache)
+
+
+def _cache_for_block(cfg: ModelConfig, j: int, b: int, s_max: int, dtype):
+    mk = mixer_kind(cfg, j)
+    c: Dict[str, Any] = {}
+    if mk == "attn":
+        c["k"] = jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype)
+        c["v"] = jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype)
+    elif mk == "mamba":
+        c["h"] = jnp.zeros((b, cfg.mamba_d_inner, cfg.mamba_d_state),
+                           jnp.float32)
+        c["conv"] = jnp.zeros((b, cfg.mamba_d_conv - 1, cfg.mamba_d_inner),
+                              dtype)
+    else:
+        hh = cfg.d_model // cfg.rwkv_head_dim
+        c["shift_t"] = jnp.zeros((b, 1, cfg.d_model), dtype)
+        c["wkv"] = jnp.zeros((b, hh, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                             jnp.float32)
+        c["shift_c"] = jnp.zeros((b, 1, cfg.d_model), dtype)
+    return c
+
+
+def _cache_axes_for_block(cfg: ModelConfig, j: int):
+    mk = mixer_kind(cfg, j)
+    if mk == "attn":
+        return {"k": (None, "batch", "kv_seq", None, None),
+                "v": (None, "batch", "kv_seq", None, None)}
+    if mk == "mamba":
+        return {"h": (None, "batch", "model", None),
+                "conv": (None, "batch", None, "model")}
+    return {"shift_t": (None, "batch", None, None),
+            "wkv": (None, "batch", "heads", None, None),
+            "shift_c": (None, "batch", None, None)}
+
+
+def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
+    n_fmts = len(qat.formats) if qat else 0
+
+    def _ctx(fmt_idx):
+        if qat is None or not qat.enabled:
+            return QuantCtx()
+        idx = fmt_idx if fmt_idx is not None else jnp.int32(n_fmts)
+        return QuantCtx(qat=qat, fmt_idx=idx)
+
+    # ---- training ---------------------------------------------------------
+    def train_loss(params, batch, fmt_idx=None):
+        ctx = _ctx(fmt_idx)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed(params, cfg, tokens)
+        extra = 0
+        if cfg.vision_tokens > 0:
+            ve = batch["vision_embeds"].astype(cfg.compute_dtype)
+            x = jnp.concatenate([ve, x], axis=1)
+            extra = ve.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     (b, x.shape[1]))
+        hidden, _, aux = forward_hidden(ctx, params, cfg, x, positions)
+        hidden = hidden[:, extra:]
+        labels = batch["labels"]
+        mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+        loss = chunked_ce_loss(ctx, hidden, _lm_head_w(params, cfg),
+                               labels, mask.astype(jnp.float32), cfg)
+        return loss + aux, {"ce": loss, "aux": aux}
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(b, s_max, dtype=None):
+        dtype = dtype or cfg.compute_dtype
+        s_max = s_max + cfg.vision_tokens   # room for prepended image embeds
+        return {"blocks": [
+            jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape),
+                _cache_for_block(cfg, j, b, s_max, dtype))
+            for j in range(cfg.scan_group)]}
+
+    def cache_axes():
+        return {"blocks": [_cache_axes_for_block(cfg, j)
+                           for j in range(cfg.scan_group)]}
+
+    def prefill(params, batch, cache):
+        """Process the full prompt, fill the cache, return last-pos logits.
+
+        Serving never fake-quantizes: weights arrive already PTQ'd /
+        SS-converted (running the QAT switch here would upcast weights to
+        f32 and double the FSDP all-gather bytes — found via dry-run HLO).
+        """
+        ctx = QuantCtx()
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed(params, cfg, tokens)
+        if cfg.vision_tokens > 0:
+            ve = batch["vision_embeds"].astype(cfg.compute_dtype)
+            x = jnp.concatenate([ve, x], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     (b, x.shape[1]))
+        hidden, new_cache, _ = forward_hidden(
+            ctx, params, cfg, x, positions, cache=cache,
+            cache_len=jnp.zeros((b,), jnp.int32), prefill=True)
+        logits = jax.lax.dot_general(
+            hidden[:, -1].astype(jnp.float32),
+            _lm_head_w(params, cfg).astype(jnp.float32),
+            (((1,), (0,)), ((), ())))
+        cache_len = jnp.full((b,), x.shape[1], jnp.int32)
+        return logits, new_cache, cache_len
+
+    def serve_step(params, batch, cache, cache_len):
+        """One decode step: batch['tokens'] (B,1) against the cache."""
+        ctx = QuantCtx()   # no fake-quant in serving (see prefill)
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = _embed(params, cfg, tokens)
+        positions = cache_len[:, None]
+        hidden, new_cache, _ = forward_hidden(
+            ctx, params, cfg, x, positions, cache=cache,
+            cache_len=cache_len, prefill=False)
+        logits = jax.lax.dot_general(
+            hidden[:, -1].astype(jnp.float32),
+            _lm_head_w(params, cfg).astype(jnp.float32),
+            (((1,), (0,)), ((), ())))
+        logits = shard_act(logits, ("batch", "vocab"))
+        return logits, new_cache
+
+    return ModelApi(
+        cfg=cfg, qat=qat,
+        init_params=functools.partial(init_params, cfg=cfg),
+        param_axes=functools.partial(param_axes, cfg=cfg),
+        train_loss=train_loss,
+        init_cache=init_cache,
+        cache_axes=cache_axes,
+        prefill=prefill,
+        serve_step=serve_step,
+    )

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWConfig, init_opt_state, adamw_update,
+                               cosine_schedule, global_norm)

@@ -1,0 +1,87 @@
+"""AdamW in pure JAX (pytree), matching torch.optim.AdamW defaults.
+
+Moments can be stored in a reduced dtype (bf16) for very large models
+(Jamba-398B) — the update math always runs in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    moment_dtype: Any = jnp.float32     # bf16 for 100B+ models
+    grad_clip: Optional[float] = 1.0
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr_scale: jax.Array | float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                            + cfg.weight_decay * p32)
+        return (p_new.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                v32.astype(cfg.moment_dtype))
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "m": new_m, "v": new_v}, \
+        {"grad_norm": gnorm}
+
+
+def cosine_schedule(base_steps: int, warmup: int = 0, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / jnp.maximum(warmup, 1))
+        prog = jnp.clip((s - warmup) / jnp.maximum(base_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return sched

@@ -1,0 +1,1 @@
+from repro.runtime.fault import PreemptionGuard, StragglerMonitor, Watchdog

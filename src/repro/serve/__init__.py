@@ -1,0 +1,2 @@
+from repro.serve.engine import ElasticEngine, Request
+from repro.serve.policy import FormatPolicy

@@ -1,0 +1,132 @@
+"""Elastic-precision serving engine (paper §3.5 inference scheme).
+
+One anchor checkpoint (MXINT8/MXFP8) is held in memory; request batches are
+served at whatever precision the runtime policy picks. Format switches cost
+one Slice-and-Scale pass (packed-domain, no FP32 re-expansion) and are cached
+per format — switching between cached formats is free.
+
+The engine runs a continuous-batching decode loop: slots hold (tokens,
+cache_len); prefill admits new requests into free slots; one fused
+serve_step advances every active slot per tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.anchor import AnchorModel, convert, materialize
+from repro.core.formats import get_format
+from repro.models.transformer import ModelApi
+from repro.serve.policy import FormatPolicy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    fmt_used: Optional[str] = None
+    done: bool = False
+
+
+class ElasticEngine:
+    def __init__(self, api: ModelApi, anchor: AnchorModel, *,
+                 batch_slots: int = 4, max_len: int = 256,
+                 policy: Optional[FormatPolicy] = None,
+                 param_template=None):
+        self.api = api
+        self.anchor = anchor
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.policy = policy or FormatPolicy(anchor.fmt_name)
+        self._template = param_template if param_template is not None else \
+            jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
+        self._weights: Dict[str, object] = {}       # fmt -> dense params
+        self._fmt_swaps = 0
+        self.current_fmt: Optional[str] = None
+        self._prefill = jax.jit(api.prefill)
+        self._step = jax.jit(api.serve_step)
+
+    # ---- weights ----------------------------------------------------------
+    def weights_for(self, fmt_name: str):
+        """Dense bf16 params at `fmt_name`, derived from the anchor via SS."""
+        if fmt_name not in self._weights:
+            fmt = get_format(fmt_name, get_format(self.anchor.fmt_name)
+                             .block_size)
+            low = convert(self.anchor, fmt)          # slice-and-scale
+            self._weights[fmt_name] = materialize(
+                low, self._template, dtype=self.api.cfg.compute_dtype)
+            self._fmt_swaps += 1
+        return self._weights[fmt_name]
+
+    def set_format(self, fmt_name: str):
+        self.current_fmt = fmt_name
+        return self.weights_for(fmt_name)
+
+    # ---- serving loop -----------------------------------------------------
+    def generate(self, requests: List[Request], greedy: bool = True,
+                 fmt_override: Optional[str] = None) -> List[Request]:
+        """Serve a list of requests to completion (continuous batching)."""
+        pending = list(requests)
+        active: List[Optional[Request]] = [None] * self.slots
+        b = self.slots
+
+        cache = self.api.init_cache(b, self.max_len)
+        cache_len = jnp.zeros((b,), jnp.int32)
+        tokens = jnp.zeros((b, 1), jnp.int32)
+
+        while pending or any(a is not None for a in active):
+            fmt = fmt_override or self.policy.pick(
+                queue_depth=len(pending),
+                active=sum(a is not None for a in active))
+            params = self.set_format(fmt)
+
+            # admit: for simplicity slots refill together when all free
+            if all(a is None for a in active) and pending:
+                batch_reqs = pending[:b]
+                pending = pending[b:]
+                maxlen = max(len(r.prompt) for r in batch_reqs)
+                toks = np.zeros((b, maxlen), np.int32)
+                for i, r in enumerate(batch_reqs):
+                    toks[i, -len(r.prompt):] = r.prompt   # left-pad
+                    active[i] = r
+                    r.fmt_used = fmt
+                cache = self.api.init_cache(b, self.max_len)
+                logits, cache, cache_len = self._prefill(
+                    params, {"tokens": jnp.asarray(toks)}, cache)
+                nxt = jnp.argmax(logits, -1) if greedy else \
+                    jax.random.categorical(jax.random.PRNGKey(0), logits)
+                tokens = nxt[:, None].astype(jnp.int32)
+                for i, r in enumerate(batch_reqs):
+                    r.out_tokens.append(int(nxt[i]))
+                continue
+
+            logits, cache = self._step(params, {"tokens": tokens}, cache,
+                                       cache_len)
+            cache_len = cache_len + 1
+            nxt = jnp.argmax(logits, -1)
+            tokens = nxt[:, None].astype(jnp.int32)
+            for i, r in enumerate(active):
+                if r is None:
+                    continue
+                r.out_tokens.append(int(nxt[i]))
+                if len(r.out_tokens) >= r.max_new or \
+                        int(cache_len[i]) >= self.max_len - 1:
+                    r.done = True
+                    active[i] = None
+            if all(a is None for a in active):
+                # batch drained; next loop admits new requests
+                pass
+        return requests
+
+    @property
+    def stats(self):
+        return {"formats_cached": sorted(self._weights),
+                "fmt_swaps": self._fmt_swaps,
+                "current": self.current_fmt}

@@ -1,0 +1,46 @@
+"""Runtime precision-selection policy for elastic inference.
+
+The paper's deployment story: "the same device might want to serve at
+different precisions for different batches based on the current load".
+This policy maps load (queue depth / active slots) to a format ladder —
+deeper queues pick lower-precision (faster, memory-lighter) formats; an idle
+server uses the anchor precision. Thresholds are configurable; hysteresis
+avoids thrashing between adjacent formats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass
+class FormatPolicy:
+    anchor: str = "mxint8"
+    # (queue_depth threshold, format) — checked top-down, first match wins
+    ladder: Tuple[Tuple[int, str], ...] = (
+        (32, "mxint4"),
+        (8, "mxint6"),
+        (0, "mxint8"),
+    )
+    hysteresis: int = 2
+    _last: str = dataclasses.field(default="", init=False)
+    _stable: int = dataclasses.field(default=0, init=False)
+    history: List[str] = dataclasses.field(default_factory=list, init=False)
+
+    def pick(self, queue_depth: int, active: int = 0) -> str:
+        target = self.anchor
+        for thresh, fmt in self.ladder:
+            if queue_depth >= thresh:
+                target = fmt
+                break
+        if self._last and target != self._last:
+            self._stable += 1
+            if self._stable < self.hysteresis:
+                target = self._last
+            else:
+                self._stable = 0
+        else:
+            self._stable = 0
+        self._last = target
+        self.history.append(target)
+        return target

@@ -1,0 +1,3 @@
+from repro.sharding.rules import (LogicalRules, shard_act, set_rules,
+                                  clear_rules, spec_for_axes, param_shardings,
+                                  active_mesh)

@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules (MaxText-style) mapped onto concrete meshes.
+
+Models annotate params/activations with *logical* axis names; a rule table
+maps each name to an ordered tuple of candidate mesh axes. At lowering time we
+resolve each name against the active mesh:
+
+  - mesh axes that don't exist are dropped (so one model works on the
+    single-pod (data, model) and the multi-pod (pod, data, model) mesh),
+  - a mapping is only applied if the axis size divides the dim (uneven dims
+    fall back to the largest usable prefix, then to replicated),
+  - every mesh axis is used at most once per spec (GSPMD requirement).
+
+Policies: per-arch overrides (e.g. Jamba uses true expert parallelism —
+experts -> model; Mixtral's 8 experts don't divide model=16, so experts stay
+local and the expert FFN dim is tensor-parallel instead).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name -> ordered candidate mesh axes (subsets applied left-to-right)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),       # ZeRO-style param/optimizer sharding
+    "model": ("model",),           # tensor parallel
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),             # d_ff
+    "seq": (),                     # residual-stream seq: replicated (baseline)
+    "seq_sp": ("model",),          # sequence-parallel residual (optimized)
+    "kv_seq": ("model",),          # decode KV-cache sequence dim
+    "experts": ("model",),         # EP (jamba)
+    "experts_tp": (),              # placeholder for TP-expert policies
+    "none": (),
+}
+
+
+@dataclasses.dataclass
+class LogicalRules:
+    table: Dict[str, Tuple[str, ...]]
+
+    def lookup(self, name: Optional[str]) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        return self.table.get(name, ())
+
+
+_STATE = threading.local()
+
+
+def set_rules(mesh: Optional[Mesh], rules: Optional[LogicalRules] = None):
+    _STATE.mesh = mesh
+    _STATE.rules = rules or LogicalRules(dict(DEFAULT_RULES))
+
+
+def clear_rules():
+    _STATE.mesh = None
+    _STATE.rules = None
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def _active_rules() -> Optional[LogicalRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Optional[LogicalRules] = None):
+    prev_mesh, prev_rules = active_mesh(), _active_rules()
+    set_rules(mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev_mesh
+        _STATE.rules = prev_rules
+
+
+def spec_for_axes(shape: Sequence[int],
+                  logical_axes: Sequence[Optional[str]],
+                  mesh: Mesh,
+                  rules: Optional[LogicalRules] = None) -> P:
+    """Resolve logical names to a PartitionSpec valid for `shape` on `mesh`."""
+    rules = rules or _active_rules() or LogicalRules(dict(DEFAULT_RULES))
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    entries = []
+    for dim, name in zip(shape, logical_axes):
+        cands = [a for a in rules.lookup(name)
+                 if a in mesh_sizes and a not in used]
+        chosen = []
+        prod = 1
+        for a in cands:
+            if dim % (prod * mesh_sizes[a]) == 0:
+                chosen.append(a)
+                prod *= mesh_sizes[a]
+        for a in chosen:
+            used.add(a)
+        if len(chosen) == 0:
+            entries.append(None)
+        elif len(chosen) == 1:
+            entries.append(chosen[0])
+        else:
+            entries.append(tuple(chosen))
+    return P(*entries)
+
+
+def shard_act(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+    """Annotate an activation with logical axes (no-op without a mesh)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{logical_axes} vs shape {x.shape}")
+    spec = spec_for_axes(x.shape, logical_axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(param_axes, params_shapes, mesh: Mesh,
+                    rules: Optional[LogicalRules] = None):
+    """Map a pytree of logical-axis tuples + shapes -> NamedShardings."""
+    def one(axes, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else shaped
+        return NamedSharding(mesh, spec_for_axes(shape, axes, mesh, rules))
+
+    return jax.tree_util.tree_map(
+        one, param_axes, params_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

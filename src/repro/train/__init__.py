@@ -1,0 +1,4 @@
+from repro.train.state import (TrainState, build_train_step,
+                               make_sharded_train_step, state_shardings)
+from repro.train.loop import LoopConfig, make_schedule, run_training
+from repro.train import compression

@@ -1,0 +1,126 @@
+"""The training loop: MF-QAT schedules + fault tolerance + checkpointing.
+
+Implements the paper's protocol end-to-end:
+  - multi-format QAT: sequential increasing-bit schedule (2→4→6→8), one
+    epoch per format (or interleaved within one epoch for large models),
+  - single-format QAT / full-precision FT baselines (same loop, different
+    schedule arrays),
+  - anchor-storage training (§3.5) via QATConfig.anchor,
+and the production-run machinery: auto-resume from LATEST, preemption-safe
+checkpointing, watchdog, straggler monitor, deterministic step->batch
+mapping (restart reproduces the exact batch sequence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.core.qat import (QATConfig, fp_schedule, interleaved_schedule,
+                            sequential_schedule, single_format_schedule)
+from repro.data.pipeline import DataConfig, LMDataset
+from repro.models.transformer import ModelApi
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.runtime.fault import (PreemptionGuard, StragglerMonitor, Watchdog)
+from repro.train.state import TrainState, build_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    schedule: str = "multiformat"   # multiformat | interleaved | fp |
+    #                                 single:<pos>
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_n: int = 3
+    watchdog_timeout_s: float = 600.0
+    log_every: int = 10
+
+
+def make_schedule(kind: str, n_formats: int, total_steps: int) -> np.ndarray:
+    if kind == "multiformat":
+        per = max(1, total_steps // max(n_formats, 1))
+        sched = sequential_schedule(n_formats, per)
+        if len(sched) < total_steps:
+            sched = np.concatenate([
+                sched, np.full(total_steps - len(sched), n_formats - 1,
+                               np.int32)])
+        return sched[:total_steps]
+    if kind == "interleaved":
+        return interleaved_schedule(n_formats, total_steps)
+    if kind == "fp":
+        return fp_schedule(total_steps, n_formats)
+    if kind.startswith("single:"):
+        return single_format_schedule(int(kind.split(":")[1]), total_steps)
+    raise ValueError(kind)
+
+
+def run_training(api: ModelApi, data: LMDataset, opt_cfg: AdamWConfig,
+                 loop: LoopConfig, *, step_fn=None, seed: int = 0,
+                 on_step: Optional[Callable] = None) -> Dict:
+    """Single-host training driver (the pjit'd multi-host variant passes a
+    sharded `step_fn` built by train.state.make_sharded_train_step)."""
+    n_formats = len(api.qat.formats) if api.qat else 0
+    schedule = make_schedule(loop.schedule, n_formats, loop.total_steps)
+
+    if step_fn is None:
+        step_fn = jax.jit(build_train_step(api, opt_cfg))
+
+    # ---- init or resume --------------------------------------------------
+    start_step = 0
+    if loop.ckpt_dir and ckpt_io.latest_step(loop.ckpt_dir) is not None:
+        template = TrainState(
+            params=jax.eval_shape(api.init_params, jax.random.PRNGKey(seed)),
+            opt=jax.eval_shape(
+                lambda p: init_opt_state(p, opt_cfg),
+                jax.eval_shape(api.init_params, jax.random.PRNGKey(seed))),
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        state, manifest = ckpt_io.restore(loop.ckpt_dir, template)
+        state = TrainState(*map(
+            lambda t: jax.tree_util.tree_map(jnp.asarray, t),
+            state.as_tuple()))
+        start_step = int(manifest["step"])
+    else:
+        params = api.init_params(jax.random.PRNGKey(seed))
+        state = TrainState(params=params,
+                           opt=init_opt_state(params, opt_cfg),
+                           step=jnp.zeros((), jnp.int32))
+
+    monitor = StragglerMonitor()
+    history: List[Dict] = []
+    watchdog = Watchdog(loop.watchdog_timeout_s).start()
+
+    with PreemptionGuard() as guard:
+        for step in range(start_step, loop.total_steps):
+            t0 = time.time()
+            batch = jax.tree_util.tree_map(jnp.asarray, data.batch_at(step))
+            fmt_idx = jnp.int32(schedule[step])
+            state, metrics = step_fn(state, batch, fmt_idx)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            watchdog.heartbeat()
+            monitor.record(step, dt)
+            metrics.update(step=step, sec=dt, fmt_idx=int(schedule[step]))
+            history.append(metrics)
+            if on_step:
+                on_step(step, metrics)
+
+            should_ckpt = loop.ckpt_dir and (
+                (step + 1) % loop.ckpt_every == 0 or guard.preempted
+                or step + 1 == loop.total_steps)
+            if should_ckpt:
+                ckpt_io.save(loop.ckpt_dir, step + 1, state,
+                             extra_meta={"schedule": loop.schedule},
+                             keep_n=loop.keep_n)
+            if guard.preempted:
+                break
+    watchdog.stop()
+    return {"state": state, "history": history,
+            "stragglers": monitor.events,
+            "preempted": guard.preempted,
+            "last_step": history[-1]["step"] + 1 if history else start_step}

@@ -1,0 +1,120 @@
+"""TrainState pytree + construction of sharded train/serve step functions."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelApi
+from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state)
+from repro.sharding.rules import (param_shardings, spec_for_axes, use_rules)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def as_tuple(self):
+        return (self.params, self.opt, self.step)
+
+
+def abstract_params(api: ModelApi, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(api.init_params, key)
+
+
+def state_shardings(api: ModelApi, mesh: Mesh):
+    """NamedShardings for params + AdamW moments (moments follow params)."""
+    shapes = abstract_params(api)
+    p_shard = param_shardings(api.param_axes(), shapes, mesh)
+    opt_shard = {
+        "step": NamedSharding(mesh, P()),
+        "m": p_shard,
+        "v": p_shard,
+    }
+    return p_shard, opt_shard
+
+
+def batch_shardings(batch_shapes: Dict, mesh: Mesh):
+    def one(s):
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, spec_for_axes(s.shape, axes, mesh))
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def build_train_step(api: ModelApi, opt_cfg: AdamWConfig,
+                     lr_schedule: Optional[Callable] = None,
+                     microbatch: int = 1):
+    """(state, batch, fmt_idx) -> (state, metrics). Grad-accumulates over
+    `microbatch` slices of the batch when > 1 (activation-memory relief)."""
+
+    def loss_fn(params, batch, fmt_idx):
+        loss, aux = api.train_loss(params, batch, fmt_idx)
+        return loss, aux
+
+    def train_step(state: TrainState, batch, fmt_idx):
+        params, opt, step = state.params, state.opt, state.step
+        if microbatch <= 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, fmt_idx)
+        else:
+            def slice_mb(i, t):
+                mb = t.shape[0] // microbatch
+                return jax.lax.dynamic_slice_in_dim(t, i * mb, mb, axis=0)
+
+            def acc_body(carry, i):
+                gsum, lsum = carry
+                mb = jax.tree_util.tree_map(
+                    functools.partial(slice_mb, i), batch)
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb, fmt_idx)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatch))
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+            loss = lsum / microbatch
+            aux = {}
+
+        lr_scale = lr_schedule(step) if lr_schedule else 1.0
+        new_params, new_opt, om = adamw_update(params, grads, opt, opt_cfg,
+                                               lr_scale)
+        metrics = {"loss": loss, **om}
+        return TrainState(new_params, new_opt, step + 1), metrics
+
+    return train_step
+
+
+def make_sharded_train_step(api: ModelApi, mesh: Mesh, opt_cfg: AdamWConfig,
+                            batch_shapes: Dict, lr_schedule=None,
+                            microbatch: int = 1, donate: bool = True):
+    """jit the train step with explicit in/out shardings on `mesh`."""
+    p_shard, opt_shard = state_shardings(api, mesh)
+    b_shard = batch_shardings(batch_shapes, mesh)
+    scalar = NamedSharding(mesh, P())
+    state_shard = TrainState(params=p_shard, opt=opt_shard, step=scalar)
+    step_fn = build_train_step(api, opt_cfg, lr_schedule, microbatch)
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(state_shard, b_shard, scalar),
+        out_shardings=(state_shard, NamedSharding(mesh, P())),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, state_shard
+
+
+jax.tree_util.register_dataclass(TrainState,
+                                 data_fields=("params", "opt", "step"),
+                                 meta_fields=())

@@ -1,0 +1,110 @@
+"""Flash attention (both paths) vs exact reference, values and gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.flash_vjp import flash_attention_vjp
+from repro.models.layers import decode_attention, flash_attention
+
+
+def exact_attention(q, k, v, causal=True, window=None):
+    """O(S^2) reference. q (B,S,H,D), k/v (B,S,Hkv,D)."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(jnp.float32)) / d ** 0.5
+    qp, kp = jnp.arange(sq), jnp.arange(skv)
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= kp[None] <= qp[:, None]
+    if window is not None:
+        m &= (qp[:, None] - kp[None]) < window
+    s = jnp.where(m[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _qkv(b=2, s=96, h=4, hkv=2, d=16, seed=0, skv=None):
+    rng = np.random.default_rng(seed)
+    skv = skv or s
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, skv, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, skv, hkv, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("chunk", [16, 32, 96])
+def test_flash_matches_exact(window, chunk):
+    q, k, v = _qkv()
+    got = flash_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    want = exact_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_flash_vjp_matches_exact_values(window, chunk):
+    q, k, v = _qkv(seed=1)
+    got = flash_attention_vjp(q, k, v, causal=True, window=window,
+                              chunk=chunk)
+    want = exact_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_flash_vjp_gradients_match_exact(window, chunk):
+    q, k, v = _qkv(seed=2, s=64)
+
+    def loss_flash(q, k, v):
+        o = flash_attention_vjp(q, k, v, causal=True, window=window,
+                                chunk=chunk)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_exact(q, k, v):
+        return jnp.sum(jnp.sin(exact_attention(q, k, v, causal=True,
+                                               window=window)))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_exact, argnums=(0, 1, 2))(q, k, v)
+    for a, b, nm in zip(g1, g2, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5, err_msg=nm)
+
+
+def test_flash_noncausal_cross_attention():
+    q, k, v = _qkv(seed=3, s=32, skv=80)
+    got = flash_attention(q, k, v, causal=False, chunk=16)
+    want = exact_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_exact_last_row():
+    """Decode over a cache == last row of full causal attention."""
+    b, s, h, hkv, d = 2, 40, 4, 2, 16
+    q, k, v = _qkv(b=b, s=s, h=h, hkv=hkv, d=d, seed=4)
+    full = exact_attention(q, k, v, causal=True)
+    got = decode_attention(q[:, -1:], k, v,
+                           jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_sliding_window():
+    b, s = 2, 64
+    q, k, v = _qkv(b=b, s=s, seed=5)
+    w = 16
+    full = exact_attention(q, k, v, causal=True, window=w)
+    got = decode_attention(q[:, -1:], k, v, jnp.full((b,), s, jnp.int32),
+                           window=w)
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)

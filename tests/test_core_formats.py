@@ -1,0 +1,47 @@
+"""Unit tests for MX format metadata."""
+import pytest
+
+from repro.core.formats import (MXFP, MXINT, delta_e, get_format)
+
+
+def test_registry_names():
+    for b in range(2, 9):
+        assert get_format(f"mxint{b}").bits == b
+    for b, (e, m) in {4: (2, 1), 5: (2, 2), 6: (3, 2), 7: (3, 3), 8: (4, 3)}.items():
+        f = get_format(f"mxfp{b}")
+        assert (f.ebits, f.mbits) == (e, m)
+        assert f.bits == b
+
+
+def test_emax_int_matches_paper():
+    # Paper §3.3: for signed MXINT, Δe = b_h − b_l.
+    for bh in range(3, 9):
+        for bl in range(2, bh):
+            assert delta_e(MXINT[bh], MXINT[bl]) == bh - bl
+
+
+def test_emax_fp_values():
+    # E4M3 max 448 (emax 8), E3M2 max 28 (emax 4), E2M1 max 6 (emax 2).
+    assert MXFP[8].emax == 8 and MXFP[8].fp_max == 448.0
+    assert MXFP[6].emax == 4 and MXFP[6].fp_max == 28.0
+    assert MXFP[4].emax == 2 and MXFP[4].fp_max == 6.0
+    assert MXFP[5].emax == 2 and MXFP[5].fp_max == 7.0
+    assert MXFP[7].emax == 4 and MXFP[7].fp_max == 30.0
+
+
+def test_delta_e_fp():
+    assert delta_e(MXFP[8], MXFP[4]) == 6
+    assert delta_e(MXFP[8], MXFP[6]) == 4
+    assert delta_e(MXFP[6], MXFP[4]) == 2
+    assert delta_e(MXFP[5], MXFP[4]) == 0  # same η: mantissa slice only
+
+
+def test_cross_kind_rejected():
+    with pytest.raises(ValueError):
+        delta_e(MXINT[8], MXFP[4])
+
+
+def test_block_size_override():
+    f = get_format("mxint4", block_size=64)
+    assert f.block_size == 64
+    assert get_format("mxint4").block_size == 32

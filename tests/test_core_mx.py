@@ -1,0 +1,167 @@
+"""MX quantize/dequantize: unit + hypothesis property tests."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (decode_fp, dequantize, encode_fp, get_format,
+                        quantize, quantize_dequantize,
+                        quantize_fp_element_value)
+
+ALL_FORMATS = [f"mxint{b}" for b in range(2, 9)] + \
+              [f"mxfp{b}" for b in range(4, 9)]
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize("name", ALL_FORMATS)
+@pytest.mark.parametrize("bs", [16, 32, 64])
+def test_reconstruction_error_bound(name, bs):
+    """Per-element error bound.
+
+    With X = 2^(floor(log2 max|V|) − emax), elements satisfy |V/X| < 2^(emax+1).
+    MXINT: rounding error ≤ 0.5; symmetric clip at 2^(b-1)−1 adds a gap < 1.
+    MXFP:  rounding ≤ ulp/2 per binade; saturation gap = 2^(emax+1) − fp_max.
+    """
+    fmt = get_format(name, bs)
+    v = _rand((8, 256), seed=1)
+    t = quantize(v, fmt, axis=-1)
+    vq = dequantize(t)
+    vb = np.asarray(v).reshape(8, 256 // bs, bs)
+    scale = np.exp2(np.asarray(t.scale_exp, np.float32))[..., None]
+    err = np.abs(np.asarray(vq).reshape(vb.shape) - vb)
+    if fmt.kind == "int":
+        bound = 1.0                      # max(0.5 rounding, <1 clip gap)
+    else:
+        clip_gap = 2.0 ** (fmt.emax + 1) - fmt.fp_max
+        bound = max(clip_gap, 2.0 ** (fmt.emax - fmt.mbits) / 2)
+    assert np.all(err <= scale * bound + 1e-7)
+
+
+@pytest.mark.parametrize("name", ALL_FORMATS)
+def test_idempotent(name):
+    """quantize(dequantize(q)) == q (the value set is a fixed point)."""
+    fmt = get_format(name, 32)
+    v = _rand((4, 128), seed=2, scale=3.0)
+    t1 = quantize(v, fmt)
+    v1 = dequantize(t1)
+    t2 = quantize(v1, fmt)
+    v2 = dequantize(t2)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+@pytest.mark.parametrize("name", ALL_FORMATS)
+def test_fused_equals_two_step(name):
+    fmt = get_format(name, 32)
+    v = _rand((4, 128), seed=3)
+    np.testing.assert_array_equal(
+        np.asarray(quantize_dequantize(v, fmt)),
+        np.asarray(dequantize(quantize(v, fmt))))
+
+
+@pytest.mark.parametrize("axis", [0, 1, 2, -1])
+def test_block_axis(axis):
+    fmt = get_format("mxint6", 32)
+    v = _rand((32, 64, 96), seed=4)
+    t = quantize(v, fmt, axis=axis)
+    vq = dequantize(t)
+    assert vq.shape == v.shape
+    ax = axis % 3
+    expected_scale_shape = list(v.shape)
+    expected_scale_shape[ax] //= 32
+    # scale_exp has the block axis moved last in blocked layout
+    assert t.scale_exp.size == np.prod(v.shape) // 32
+
+
+def test_zero_block():
+    fmt = get_format("mxint8", 32)
+    v = jnp.zeros((2, 64))
+    t = quantize(v, fmt)
+    np.testing.assert_array_equal(np.asarray(t.codes), 0)
+    np.testing.assert_array_equal(np.asarray(dequantize(t)), 0.0)
+
+
+def test_scale_matches_paper_formula():
+    """shared_exp = floor(log2 max|V|) − emax(f)  (Eq. 3/5)."""
+    for name in ["mxint8", "mxint4", "mxfp8", "mxfp4"]:
+        fmt = get_format(name, 32)
+        v = _rand((16, 320), seed=5, scale=7.3)
+        t = quantize(v, fmt)
+        vb = np.asarray(v, np.float64).reshape(16, 10, 32)
+        bmax = np.abs(vb).max(-1)
+        want = np.floor(np.log2(bmax)) - fmt.emax
+        np.testing.assert_array_equal(
+            np.asarray(t.scale_exp, np.int32), want.astype(np.int32))
+
+
+@pytest.mark.parametrize("name", [f"mxfp{b}" for b in range(4, 9)])
+def test_fp_encode_decode_roundtrip(name):
+    fmt = get_format(name, 32)
+    # every representable value round-trips
+    vals = quantize_fp_element_value(
+        jnp.linspace(-fmt.fp_max, fmt.fp_max, 4097), fmt)
+    rt = decode_fp(encode_fp(vals, fmt), fmt)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(vals))
+
+
+def test_e4m3_saturates_at_448():
+    fmt = get_format("mxfp8", 32)
+    q = quantize_fp_element_value(jnp.asarray([500.0, -10000.0, 448.0]), fmt)
+    np.testing.assert_array_equal(np.asarray(q), [448.0, -448.0, 448.0])
+
+
+def test_mxint_symmetric_clip():
+    fmt = get_format("mxint4", 32)
+    v = _rand((2, 64), seed=6)
+    t = quantize(v, fmt)
+    assert int(jnp.min(t.codes)) >= -7 and int(jnp.max(t.codes)) <= 7
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+# ---------------------------------------------------------------------------
+@hypothesis.given(
+    arr=hnp.arrays(np.float32, (2, 64),
+                   elements=st.floats(-1e4, 1e4, width=32,
+                                      allow_nan=False, allow_infinity=False)),
+    name=st.sampled_from(ALL_FORMATS),
+)
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_prop_dequant_in_convex_hull(arr, name):
+    """Reconstruction never exceeds the block max in magnitude by > 1 quantum."""
+    fmt = get_format(name, 32)
+    v = jnp.asarray(arr)
+    vq = np.asarray(dequantize(quantize(v, fmt)))
+    bmax = np.abs(arr).reshape(2, 2, 32).max(-1, keepdims=True)
+    assert np.all(np.abs(vq.reshape(2, 2, 32)) <= 2 * bmax + 1e-30)
+
+
+@hypothesis.given(
+    arr=hnp.arrays(np.float32, (1, 32),
+                   elements=st.floats(-1e6, 1e6, width=32,
+                                      allow_nan=False, allow_infinity=False)),
+)
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_prop_idempotence_mxint8(arr):
+    fmt = get_format("mxint8", 32)
+    v1 = dequantize(quantize(jnp.asarray(arr), fmt))
+    v2 = dequantize(quantize(v1, fmt))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+@hypothesis.given(scale=st.floats(1e-20, 1e20))
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_prop_scale_equivariance(scale):
+    """Quantizing 2^k·V scales the reconstruction by exactly 2^k."""
+    k = int(np.floor(np.log2(scale)))
+    fmt = get_format("mxint6", 32)
+    v = _rand((1, 64), seed=7)
+    a = np.asarray(dequantize(quantize(v, fmt)), np.float64)
+    b = np.asarray(dequantize(quantize(v * (2.0 ** k), fmt)), np.float64)
+    np.testing.assert_allclose(b, a * 2.0 ** k, rtol=0, atol=0)

@@ -1,0 +1,175 @@
+"""QAT machinery: STE gradients, format switches, schedules, packing, anchor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QATConfig, fake_quant, fake_quant_anchored,
+                        fake_quant_anchored_switch, fake_quant_switch,
+                        fp_schedule, get_format, interleaved_schedule,
+                        make_anchor, materialize, convert, dequantize,
+                        quantize, quantize_dequantize, sequential_schedule,
+                        single_format_schedule, storage_bytes, ptq_pytree)
+from repro.core.packed import (pack_np, unpack_np, pack_int4_jnp,
+                               unpack_int4_jnp)
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape)
+                       .astype(np.float32))
+
+
+def test_ste_gradient_is_identity():
+    w = _rand((8, 64), 0)
+    fmt = get_format("mxint4", 32)
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, fmt) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_ste_anchored_gradient_is_identity():
+    w = _rand((8, 64), 1)
+    g = jax.grad(lambda x: jnp.sum(
+        fake_quant_anchored(x, get_format("mxint8", 32),
+                            get_format("mxint4", 32))))(w)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+def test_switch_matches_static_branches():
+    w = _rand((8, 64), 2)
+    fmts = tuple(get_format(n, 32) for n in ["mxint2", "mxint4", "mxint8"])
+    for i, f in enumerate(fmts):
+        got = fake_quant_switch(w, fmts, jnp.int32(i))
+        want = quantize_dequantize(w, f, axis=-1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # idx == len(formats) -> pass-through (FP baseline branch)
+    got = fake_quant_switch(w, fmts, jnp.int32(len(fmts)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+
+
+def test_anchored_switch_matches_manual_pipeline():
+    w = _rand((8, 64), 3)
+    anchor = get_format("mxint8", 32)
+    fmts = tuple(get_format(f"mxint{b}", 32) for b in [2, 4, 6])
+    for i, f in enumerate(fmts):
+        got = fake_quant_anchored_switch(w, anchor, fmts, jnp.int32(i))
+        want = fake_quant_anchored(w, anchor, f)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_switch_jits_without_recompile():
+    w = _rand((8, 64), 4)
+    fmts = tuple(get_format(n, 32) for n in ["mxint2", "mxint4"])
+    f = jax.jit(lambda x, i: fake_quant_switch(x, fmts, i))
+    f(w, jnp.int32(0))
+    n0 = f._cache_size()
+    f(w, jnp.int32(1))
+    assert f._cache_size() == n0
+
+
+def test_schedules():
+    seq = sequential_schedule(4, 32)
+    assert seq.shape == (128,) and seq[0] == 0 and seq[-1] == 3
+    assert (np.diff(seq) >= 0).all()     # increasing-bit order (paper §3.2)
+    inter = interleaved_schedule(3, 10)
+    assert set(inter) == {0, 1, 2}
+    assert (np.bincount(inter, minlength=3) >= 3).all()
+    fp = fp_schedule(5, 4)
+    assert (fp == 4).all()
+    sf = single_format_schedule(2, 5)
+    assert (sf == 2).all()
+
+
+def test_qat_config_param_filter():
+    cfg = QATConfig(formats=("mxint4",))
+    assert cfg.is_quantized_path("['decoder']['layers']['attn']['wq']")
+    assert not cfg.is_quantized_path("['embed_tokens']['weight']")
+    assert not cfg.is_quantized_path("['lm_head']['w']")
+    assert not cfg.is_quantized_path("['layers']['norm']['scale']")
+    assert not cfg.is_quantized_path("['mamba']['conv1d']['w']")
+
+
+def test_qat_apply_skips_vectors_and_excluded():
+    cfg = QATConfig(formats=("mxint2",), block_size=32)
+    w2d = _rand((64, 32), 5)
+    v1d = _rand((64,), 6)
+    idx = jnp.int32(0)
+    out = cfg.apply(w2d, "['mlp']['w1']", idx)
+    assert not np.allclose(np.asarray(out), np.asarray(w2d))
+    np.testing.assert_array_equal(
+        np.asarray(cfg.apply(v1d, "['mlp']['w1']", idx)), np.asarray(v1d))
+    np.testing.assert_array_equal(
+        np.asarray(cfg.apply(w2d, "['embed']['w']", idx)), np.asarray(w2d))
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits,lo,hi,signed", [
+    (2, -1, 1, True), (3, -3, 3, True), (4, -7, 7, True), (5, -15, 15, True),
+    (6, -31, 31, True), (7, -63, 63, True), (8, -127, 127, True),
+    (4, 0, 15, False), (8, 0, 255, False),
+])
+def test_pack_roundtrip(bits, lo, hi, signed):
+    rng = np.random.default_rng(bits)
+    codes = rng.integers(lo, hi + 1, size=(7, 96)).astype(
+        np.int8 if signed else np.uint8)
+    buf, shape = pack_np(codes, bits)
+    back = unpack_np(buf, bits, shape, signed)
+    np.testing.assert_array_equal(back, codes)
+    # true compression
+    if bits in (2, 4, 6):
+        assert buf.nbytes < codes.size
+
+
+def test_int4_jnp_pack_roundtrip():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-7, 8, size=(16, 128)).astype(np.int8))
+    packed = pack_int4_jnp(codes)
+    assert packed.shape == (16, 64)
+    back = unpack_int4_jnp(packed)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# Anchor pipeline
+# ---------------------------------------------------------------------------
+def _tiny_params():
+    return {
+        "embed": {"weight": _rand((128, 32), 7)},
+        "layer0": {"wq": _rand((32, 32), 8), "wo": _rand((32, 32), 9),
+                   "norm": {"scale": jnp.ones((32,))}},
+        "lm_head": {"w": _rand((32, 128), 10)},
+    }
+
+
+def test_anchor_roundtrip_and_storage():
+    params = _tiny_params()
+    cfg = QATConfig(formats=("mxint4",), anchor="mxint8", block_size=32)
+    am = make_anchor(params, cfg)
+    assert set(am.quantized) == {"['layer0']['wq']", "['layer0']['wo']"}
+    # anchor materialization ≈ ptq at mxint8
+    dense = materialize(am, params, dtype=jnp.float32)
+    want = ptq_pytree(params, cfg, get_format("mxint8", 32))
+    np.testing.assert_allclose(np.asarray(dense["layer0"]["wq"]),
+                               np.asarray(want["layer0"]["wq"]), atol=0)
+    # storage: quantized leaves shrink ~4x vs f32 (int8 elems + 1 scale/32)
+    q_bytes = sum(t.nbytes_logical for t in am.quantized.values())
+    q_f32 = sum(int(np.prod(t.shape)) * 4 for t in am.quantized.values())
+    assert q_bytes < q_f32 * 0.27
+    f32_bytes = sum(x.size * 4 for x in jax.tree_util.tree_leaves(params))
+    assert storage_bytes(am) < f32_bytes
+
+
+def test_anchor_convert_matches_ss():
+    params = _tiny_params()
+    cfg = QATConfig(formats=("mxint4",), anchor="mxint8", block_size=32)
+    am = make_anchor(params, cfg)
+    lo = convert(am, get_format("mxint4", 32))
+    assert lo.fmt_name == "mxint4"
+    # equals quantize->ss by hand
+    hand = quantize(params["layer0"]["wq"], get_format("mxint8", 32), axis=0)
+    from repro.core import slice_and_scale
+    hand4 = slice_and_scale(hand, get_format("mxint4", 32))
+    np.testing.assert_array_equal(
+        np.asarray(lo.quantized["['layer0']['wq']"].codes),
+        np.asarray(hand4.codes))

@@ -1,0 +1,77 @@
+"""Dry-run tooling: HLO collective parsing, input specs, mesh construction."""
+import jax
+import numpy as np
+import pytest
+
+# Lock the device count to this container's single CPU BEFORE importing
+# repro.launch.dryrun anywhere in this module — its import sets
+# XLA_FLAGS=...device_count=512 (required first lines per the dry-run spec),
+# which must not leak into the test environment.
+jax.devices()
+
+
+def test_parse_collective_bytes():
+    from repro.launch.dryrun import parse_collective_bytes
+    hlo = """
+  %ag = f32[16,512]{1,0} all-gather(%x), replica_groups=...
+  %ar = bf16[8,128]{1,0} all-reduce(%y), to_apply=%add
+  %rs = f32[4,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = s8[32]{0} all-to-all(%w)
+  %cp = f32[2,2]{1,0} collective-permute(%v)
+  %ags = (f32[16,512]{1,0}, u32[]) all-gather-start(%x2)
+  %not = f32[9,9]{1,0} add(%a, %b)
+"""
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 512 * 4 * 2      # ag + ag-start
+    assert out["all-reduce"] == 8 * 128 * 2
+    assert out["reduce-scatter"] == 4 * 64 * 4
+    assert out["all-to-all"] == 32
+    assert out["collective-permute"] == 16
+    # all-reduce weighted 2x in the ring estimate
+    assert out["total_weighted"] == (out["all-gather"]
+                                     + 2 * out["all-reduce"]
+                                     + out["reduce-scatter"]
+                                     + out["all-to-all"]
+                                     + out["collective-permute"])
+
+
+def test_batch_specs_per_family():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import batch_specs
+    for arch, extra in [("qwen3-4b", None),
+                        ("llava-next-mistral-7b", "vision_embeds"),
+                        ("seamless-m4t-large-v2", "frame_embeds")]:
+        cfg = get_config(arch)
+        b = batch_specs(cfg, SHAPES["train_4k"], "train")
+        assert b["tokens"].shape == (256, 4096)
+        if extra:
+            assert extra in b
+        d = batch_specs(cfg, SHAPES["decode_32k"], "decode")
+        assert d["tokens"].shape == (128, 1)
+        assert extra is None or extra not in d
+
+
+def test_decode_cache_rule():
+    from repro.configs import SHAPES, decode_cache_len, get_config
+    assert decode_cache_len(get_config("mixtral-8x7b"),
+                            SHAPES["long_500k"]) == 4096   # SWA-bounded
+    assert decode_cache_len(get_config("rwkv6-7b"),
+                            SHAPES["decode_32k"]) == 32768
+    assert decode_cache_len(get_config("qwen2-72b"),
+                            SHAPES["decode_32k"]) == 32768
+
+
+def test_make_debug_mesh_single_device():
+    from repro.launch.mesh import make_debug_mesh
+    m = make_debug_mesh(1, 1)
+    assert m.axis_names == ("data", "model")
+    assert int(np.prod(m.devices.shape)) == 1
+
+
+def test_production_mesh_requires_many_devices():
+    """On this 1-device test process the production mesh must refuse —
+    proving the dry-run's 512-device env is NOT leaking into tests."""
+    from repro.launch.mesh import make_production_mesh
+    assert len(jax.devices()) == 1
+    with pytest.raises(Exception):
+        make_production_mesh(multi_pod=False)

@@ -1,0 +1,197 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/format sweeps.
+
+All kernels run in interpret mode on CPU — the kernel bodies execute exactly
+as written for TPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MXTensor, get_format
+from repro.kernels import ops, ref
+
+INT_FORMATS = [f"mxint{b}" for b in (2, 4, 6, 8)]
+FP_FORMATS = [f"mxfp{b}" for b in (4, 5, 6, 8)]
+
+
+def _rand(shape, seed=0, dtype=np.float32, scale=1.0):
+    x = np.random.default_rng(seed).normal(size=shape) * scale
+    return jnp.asarray(x.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# mx_quantize
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", INT_FORMATS + FP_FORMATS)
+@pytest.mark.parametrize("shape", [(8, 128), (32, 256), (4, 16, 64)])
+def test_mx_quantize_matches_ref(name, shape):
+    fmt = get_format(name, 32)
+    v = _rand(shape, seed=1)
+    got = ops.mx_quantize(v, fmt, axis=-1, interpret=True)
+    want_codes, want_scales = ref.ref_mx_quantize(v, fmt, axis=-1)
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_codes))
+    np.testing.assert_array_equal(np.asarray(got.scale_exp),
+                                  np.asarray(want_scales))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_mx_quantize_dtypes(dtype):
+    fmt = get_format("mxint8", 32)
+    v = _rand((16, 128), seed=2).astype(dtype)
+    got = ops.mx_quantize(v, fmt, interpret=True)
+    want_codes, _ = ref.ref_mx_quantize(v, fmt, axis=-1)
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_codes))
+
+
+@pytest.mark.parametrize("bs", [16, 32, 64])
+def test_mx_quantize_block_sizes(bs):
+    fmt = get_format("mxint4", bs)
+    v = _rand((8, 256), seed=3)
+    got = ops.mx_quantize(v, fmt, interpret=True)
+    want_codes, want_scales = ref.ref_mx_quantize(v, fmt, axis=-1)
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_codes))
+    np.testing.assert_array_equal(np.asarray(got.scale_exp),
+                                  np.asarray(want_scales))
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", INT_FORMATS + FP_FORMATS)
+@pytest.mark.parametrize("shape", [(8, 128), (64, 512)])
+def test_fake_quant_matches_ref(name, shape):
+    fmt = get_format(name, 32)
+    v = _rand(shape, seed=4, scale=2.5)
+    got = ops.fake_quant(v, fmt, axis=-1, interpret=True)
+    want = ref.ref_fake_quant(v, fmt, axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+def test_fake_quant_axis0():
+    fmt = get_format("mxint4", 32)
+    v = _rand((128, 48), seed=5)
+    got = ops.fake_quant(v, fmt, axis=0, interpret=True)
+    want = ref.ref_fake_quant(v, fmt, axis=0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# ss_convert
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bh,bl", [(8, 2), (8, 4), (8, 6), (6, 4), (4, 2)])
+def test_ss_convert_int_matches_ref(bh, bl):
+    high = get_format(f"mxint{bh}", 32)
+    low = get_format(f"mxint{bl}", 32)
+    v = _rand((16, 256), seed=6)
+    t = ops.mx_quantize(v, high, interpret=True)
+    got = ops.ss_convert(t, low, interpret=True)
+    want_codes, want_scales = ref.ref_ss_convert(
+        t.codes, t.scale_exp, high, low, block_axis=-1)
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_codes))
+    np.testing.assert_array_equal(np.asarray(got.scale_exp),
+                                  np.asarray(want_scales))
+
+
+@pytest.mark.parametrize("bh,bl", [(8, 4), (8, 6), (8, 5), (6, 4), (5, 4)])
+def test_ss_convert_fp_matches_ref(bh, bl):
+    high = get_format(f"mxfp{bh}", 32)
+    low = get_format(f"mxfp{bl}", 32)
+    v = _rand((16, 256), seed=7)
+    t = ops.mx_quantize(v, high, interpret=True)
+    got = ops.ss_convert(t, low, interpret=True)
+    want_codes, want_scales = ref.ref_ss_convert(
+        t.codes, t.scale_exp, high, low, block_axis=-1)
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_codes))
+    np.testing.assert_array_equal(np.asarray(got.scale_exp),
+                                  np.asarray(want_scales))
+
+
+# ---------------------------------------------------------------------------
+# mx_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["mxint8", "mxint4", "mxfp8", "mxfp4"])
+@pytest.mark.parametrize("mnk", [(8, 128, 64), (16, 256, 128), (32, 128, 256)])
+def test_mx_matmul_matches_ref(name, mnk):
+    m, n, k = mnk
+    fmt = get_format(name, 32)
+    x = _rand((m, k), seed=8, dtype=np.float32)
+    w = _rand((k, n), seed=9)
+    t = ops.mx_quantize(w, fmt, axis=0, interpret=True)
+    codes, scales = ops.to_weight_layout(t)   # (K,N), (K/bs,N)
+    got = ops.mx_matmul(x, codes, scales, fmt, interpret=True)
+    want = ref.ref_mx_matmul(x, codes, scales, fmt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_mx_matmul_activation_dtypes(dtype):
+    fmt = get_format("mxint8", 32)
+    x = _rand((16, 128), seed=10).astype(dtype)
+    w = _rand((128, 256), seed=11)
+    t = ops.mx_quantize(w, fmt, axis=0, interpret=True)
+    codes, scales = ops.to_weight_layout(t)
+    got = ops.mx_matmul(x, codes, scales, fmt, interpret=True)
+    want = ref.ref_mx_matmul(x.astype(jnp.float32), codes, scales, fmt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("mnk", [(8, 256, 64), (16, 512, 128)])
+def test_mx_matmul_int4_packed_matches_ref(mnk):
+    m, n, k = mnk
+    fmt = get_format("mxint4", 32)
+    x = _rand((m, k), seed=12)
+    w = _rand((k, n), seed=13)
+    t = ops.mx_quantize(w, fmt, axis=0, interpret=True)
+    codes, scales = ops.to_weight_layout(t)
+    packed = ops.pack_int4_splitn(codes)
+    assert packed.shape == (k, n // 2)
+    got = ops.mx_matmul_int4(x, packed, scales, fmt, interpret=True)
+    want = ref.ref_mx_matmul_int4_packed(x, packed, scales, fmt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    # and the packed path equals the unpacked path exactly
+    unpacked = ops.mx_matmul(x, codes, scales, fmt, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(unpacked),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_mx_matmul_explicit_tiles():
+    fmt = get_format("mxint8", 32)
+    x = _rand((64, 256), seed=14)
+    w = _rand((256, 512), seed=15)
+    t = ops.mx_quantize(w, fmt, axis=0, interpret=True)
+    codes, scales = ops.to_weight_layout(t)
+    a = ops.mx_matmul(x, codes, scales, fmt, interpret=True,
+                      tm=32, tn=128, tk=64)
+    b = ops.mx_matmul(x, codes, scales, fmt, interpret=True,
+                      tm=64, tn=256, tk=128)
+    # different K tilings reorder the f32 accumulation
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: kernel pipeline == core pipeline
+# ---------------------------------------------------------------------------
+def test_kernel_pipeline_equals_core_pipeline():
+    """quantize -> ss -> dequant-matmul via kernels == via core ops."""
+    from repro.core import dequantize, quantize, slice_and_scale
+    fmt8 = get_format("mxint8", 32)
+    fmt4 = get_format("mxint4", 32)
+    x = _rand((8, 128), seed=16)
+    w = _rand((128, 128), seed=17)
+
+    tk = ops.mx_quantize(w, fmt8, axis=0, interpret=True)
+    tk4 = ops.ss_convert(tk, fmt4, interpret=True)
+    codes, scales = ops.to_weight_layout(tk4)
+    got = ops.mx_matmul(x, codes, scales, fmt4, interpret=True)
+
+    tc = quantize(w, fmt8, axis=0)
+    tc4 = slice_and_scale(tc, fmt4)
+    want = x @ dequantize(tc4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)

@@ -1,0 +1,101 @@
+"""Packed-MX serving params: numerics + eval_shape lowering contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import get_format, make_anchor
+from repro.core.anchor import materialize
+from repro.core.qat import QATConfig
+from repro.models import get_model
+from repro.serve.packed_params import (densify_params, make_packed_params,
+                                       make_packed_serve_step)
+
+QAT = QATConfig(formats=("mxint4", "mxint8"), block_size=32)
+
+
+def _setup(arch="smollm-135m"):
+    cfg = get_reduced(arch)
+    api = get_model(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    anchor = make_anchor(params, QAT, get_format("mxint8", 32))
+    return cfg, api, params, anchor
+
+
+def test_densify_int8_matches_materialize():
+    cfg, api, params, anchor = _setup()
+    packed = make_packed_params(anchor, params, target_bits=8,
+                                dtype=jnp.float32)
+    dense = densify_params(packed, 32, jnp.float32)
+    want = materialize(anchor, params, dtype=jnp.float32)
+    for a, b in zip(jax.tree_util.tree_leaves(dense),
+                    jax.tree_util.tree_leaves(want)):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=0, atol=0)
+
+
+def test_densify_int4_matches_ss_path():
+    from repro.core.anchor import convert
+    cfg, api, params, anchor = _setup()
+    packed = make_packed_params(anchor, params, target_bits=4,
+                                dtype=jnp.float32)
+    dense = densify_params(packed, 32, jnp.float32)
+    want = materialize(convert(anchor, get_format("mxint4", 32)), params,
+                       dtype=jnp.float32)
+    for a, b in zip(jax.tree_util.tree_leaves(dense),
+                    jax.tree_util.tree_leaves(want)):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=0, atol=0)
+
+
+def test_packed_serve_step_runs_and_matches_dense():
+    cfg, api, params, anchor = _setup()
+    b, s = 2, 16
+    cache = api.init_cache(b, s + 4)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (b, s)), jnp.int32)
+    _, cache, clen = jax.jit(api.prefill)(
+        materialize(anchor, params, dtype=cfg.compute_dtype),
+        {"tokens": toks}, cache)
+
+    packed = make_packed_params(anchor, params, target_bits=8,
+                                dtype=cfg.compute_dtype)
+    step = jax.jit(make_packed_serve_step(api, 32))
+    nxt = {"tokens": toks[:, -1:]}
+    logits_p, _ = step(packed, nxt, cache, clen)
+
+    dense = materialize(anchor, params, dtype=cfg.compute_dtype)
+    logits_d, _ = jax.jit(api.serve_step)(dense, nxt, cache, clen)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_packed_params_int4_are_smaller_in_memory():
+    cfg, api, params, anchor = _setup()
+    p8 = make_packed_params(anchor, params, target_bits=8)
+    p4 = make_packed_params(anchor, params, target_bits=4)
+
+    def weight_bytes(tree):
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(tree):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
+    assert weight_bytes(p4) < weight_bytes(p8)
+
+
+def test_eval_shape_composes():
+    """The dry-run contract: packed params build abstractly (no allocation)."""
+    cfg, api, params, anchor = _setup()
+    params_s = jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
+    packed_s = jax.eval_shape(
+        lambda p: make_packed_params(
+            make_anchor(p, QAT, get_format("mxint8", 32)), p, target_bits=4),
+        params_s)
+    leaves = jax.tree_util.tree_leaves(packed_s)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    assert any(l.dtype == jnp.uint8 for l in leaves)   # packed nibbles

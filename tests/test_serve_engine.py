@@ -1,0 +1,134 @@
+"""Elastic serving engine: anchor -> SS -> serve at multiple precisions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_anchor, storage_bytes
+from repro.core.qat import QATConfig
+from repro.models import get_model
+from repro.serve.engine import ElasticEngine, Request
+from repro.serve.policy import FormatPolicy
+
+QAT = QATConfig(formats=("mxint4", "mxint8"), anchor="mxint8", block_size=32)
+
+
+def _engine(arch="smollm-135m", slots=2, max_len=48):
+    cfg = get_reduced(arch)
+    api = get_model(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    anchor = make_anchor(params, QAT)
+    eng = ElasticEngine(api, anchor, batch_slots=slots, max_len=max_len,
+                        param_template=params)
+    return cfg, api, params, eng
+
+
+def test_generate_batched_requests():
+    cfg, api, params, eng = _engine()
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(
+        np.int32), max_new=5) for i in range(4)]
+    out = eng.generate(reqs, fmt_override="mxint8")
+    for r in out:
+        assert len(r.out_tokens) >= 5 or r.done
+        assert r.fmt_used == "mxint8"
+    assert eng.stats["formats_cached"] == ["mxint8"]
+
+
+def test_format_switch_via_policy():
+    cfg, api, params, eng = _engine()
+    eng.policy = FormatPolicy(anchor="mxint8",
+                              ladder=((3, "mxint4"), (0, "mxint8")),
+                              hysteresis=0)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6).astype(
+        np.int32), max_new=3) for i in range(6)]
+    eng.generate(reqs)
+    # deep queue at admission -> low precision used at least once
+    assert "mxint4" in eng.stats["formats_cached"]
+
+
+def test_ss_weights_match_direct_ptq():
+    """Engine weights at mxint4 == direct quantization path within 1 ulp."""
+    from repro.core import dequantize, get_format, quantize, slice_and_scale
+    cfg, api, params, eng = _engine()
+    w4 = eng.weights_for("mxint4")
+    # pick one quantized leaf and compare against hand conversion
+    w = params["blocks"][0]["attn"]["wq"][0]          # (d, H*hd)
+    t8 = quantize(w, get_format("mxint8", 32), axis=0)
+    t4 = slice_and_scale(t8, get_format("mxint4", 32))
+    want = dequantize(t4, dtype=jnp.float32)
+    got = w4["blocks"][0]["attn"]["wq"][0].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+def test_greedy_output_consistency_high_precision():
+    """mxint8-served greedy tokens ≈ fp-served greedy tokens (most match)."""
+    cfg, api, params, eng = _engine(max_len=64)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+
+    r8 = eng.generate([Request(rid=0, prompt=prompt, max_new=8)],
+                      fmt_override="mxint8")[0]
+
+    # fp reference: greedy decode with raw params
+    cache = api.init_cache(eng.slots, eng.max_len)
+    toks = np.zeros((eng.slots, 12), np.int32)
+    toks[0] = prompt
+    logits, cache, clen = jax.jit(api.prefill)(
+        params, {"tokens": jnp.asarray(toks)}, cache)
+    fp_tokens = [int(jnp.argmax(logits[0]))]
+    cur = jnp.asarray([[fp_tokens[-1]], [0]], jnp.int32)[:eng.slots]
+    for _ in range(7):
+        logits, cache = jax.jit(api.serve_step)(params, {"tokens": cur},
+                                                cache, clen)
+        clen = clen + 1
+        nxt = int(jnp.argmax(logits[0]))
+        fp_tokens.append(nxt)
+        cur = cur.at[0, 0].set(nxt)
+    agree = sum(a == b for a, b in zip(r8.out_tokens, fp_tokens))
+    assert agree >= 5, (r8.out_tokens, fp_tokens)
+
+
+def test_policy_ladder_and_hysteresis():
+    p = FormatPolicy(anchor="mxint8",
+                     ladder=((32, "mxint4"), (8, "mxint6"), (0, "mxint8")),
+                     hysteresis=2)
+    assert p.pick(0) == "mxint8"
+    assert p.pick(10) == "mxint8"      # hysteresis holds once
+    assert p.pick(10) == "mxint6"      # then switches
+    assert p.pick(100) == "mxint6"
+    assert p.pick(100) == "mxint4"
+
+
+def test_anchor_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.anchor_ckpt import load_anchor, save_anchor
+    cfg, api, params, eng = _engine()
+    path = str(tmp_path / "anchor_ck")
+    nbytes = save_anchor(path, eng.anchor)
+    loaded = load_anchor(path)
+    assert loaded.fmt_name == eng.anchor.fmt_name
+    for k in eng.anchor.quantized:
+        np.testing.assert_array_equal(
+            np.asarray(loaded.quantized[k].codes),
+            np.asarray(eng.anchor.quantized[k].codes))
+        np.testing.assert_array_equal(
+            np.asarray(loaded.quantized[k].scale_exp),
+            np.asarray(eng.anchor.quantized[k].scale_exp))
+    # true storage saving vs f32
+    f32 = sum(x.size * 4 for x in jax.tree_util.tree_leaves(params))
+    assert nbytes < f32 * 0.75
+
+
+def test_anchor_int4_checkpoint_half_of_int8(tmp_path):
+    """Packed MXINT4 checkpoint ≈ half the bytes of MXINT8 (elastic tiers)."""
+    from repro.checkpoint.anchor_ckpt import save_anchor
+    from repro.core import convert, get_format
+    cfg, api, params, eng = _engine()
+    n8 = save_anchor(str(tmp_path / "a8"), eng.anchor)
+    a4 = convert(eng.anchor, get_format("mxint4", 32))
+    n4 = save_anchor(str(tmp_path / "a4"), a4)
+    q_frac = sum(t.codes.size for t in eng.anchor.quantized.values())
+    assert n4 < n8  # strictly smaller; ratio depends on raw-leaf fraction
