@@ -1,9 +1,15 @@
 """Elastic-precision serving demo: one anchor checkpoint, load-adaptive
-precision, batched requests (deliverable (b), serving flavor).
+precision, packed-weight continuous batching.
 
-A burst of requests hits the engine; the FormatPolicy watches queue depth and
-drops precision under load (mxint8 -> 6 -> 4), recovering when the queue
-drains — all served from a single MXINT8 anchor via Slice-and-Scale.
+A burst of requests hits the engine; the FormatPolicy watches queue depth at
+each batch admission and drops precision under load (mxint8 -> 6 -> 4),
+recovering when the queue drains. Every format is served from a single
+MXINT8 anchor via Slice-and-Scale, and the decode tick reads *packed* MX
+codes (MXTensor / nibble-packed PackedInt4Leaf) — dequantization happens
+inside the jitted step, so HBM weight traffic is the packed bytes. Requests
+are admitted into individual slots (staggered arrivals never re-prefill
+active sequences), and the format is pinned per batch, never switched
+mid-sequence.
 """
 import sys
 
@@ -43,16 +49,30 @@ def main():
     for r in reqs:
         print(f"  req {r.rid}: fmt={r.fmt_used} tokens={r.out_tokens}")
 
+    print("\nSTAGGERED: lengths differ, slots retire and refill "
+          "independently")
+    reqs = [Request(rid=50 + i, prompt=rng.integers(0, cfg.vocab, 8)
+                    .astype(np.int32), max_new=3 + 2 * i) for i in range(6)]
+    eng.generate(reqs)
+    for r in reqs:
+        print(f"  req {r.rid}: fmt={r.fmt_used} n_out={len(r.out_tokens)}")
+
     print("\nBURST: 20 requests")
     reqs = [Request(rid=100 + i, prompt=rng.integers(0, cfg.vocab, 8)
                     .astype(np.int32), max_new=6) for i in range(20)]
     eng.generate(reqs)
     fmts = sorted({r.fmt_used for r in reqs})
     print(f"  formats used across the burst: {fmts}")
-    print(f"\nengine stats: {eng.stats}")
+
+    st = eng.stats
+    print(f"\nengine stats: ticks={st['ticks']} tokens={st['tokens_out']} "
+          f"swaps={st['fmt_swaps']}")
+    for fmt in st["formats_cached"]:
+        print(f"  {fmt:>7}: containers={st['containers'][fmt]} "
+              f"weight_bytes={st['weight_bytes'][fmt]}")
     print("one anchor checkpoint served "
-          f"{len(eng.stats['formats_cached'])} precisions; "
-          "each switch = one packed-domain Slice-and-Scale pass.")
+          f"{len(st['formats_cached'])} precisions; each decode tick streams "
+          "the PACKED bytes above, not dense bf16.")
 
 
 if __name__ == "__main__":

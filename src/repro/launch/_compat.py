@@ -1,0 +1,34 @@
+"""Version shims for JAX API drift in the launch/analysis tooling.
+
+``jax.stages.Compiled.cost_analysis()`` historically returned a single dict;
+current JAX returns a *list* of per-computation dicts (usually length 1).
+``compiled_cost`` normalizes both to one flat dict so callers can keep doing
+``cost.get("flops", 0.0)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+
+def compiled_cost(compiled) -> Dict[str, Any]:
+    """Normalized ``cost_analysis()`` of a ``jax.stages.Compiled``.
+
+    Returns {} when the backend reports nothing. When the analysis is a list
+    of per-computation dicts, numeric entries are summed across computations
+    (the main module dominates; summing keeps totals right if XLA ever splits
+    the module).
+    """
+    cost = compiled.cost_analysis()
+    if not cost:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    merged: Dict[str, Any] = {}
+    for comp in cost:
+        for k, v in (comp or {}).items():
+            if isinstance(v, (int, float)) and isinstance(
+                    merged.get(k, 0.0), (int, float)):
+                merged[k] = merged.get(k, 0.0) + v
+            else:
+                merged.setdefault(k, v)
+    return merged

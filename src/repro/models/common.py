@@ -173,6 +173,48 @@ NO_QUANT = QuantCtx()
 
 
 # =============================================================================
+# Slot-level cache surgery (continuous batching)
+# =============================================================================
+# Cache pytrees stack a leading group/layer axis, so the batch axis is 1 on
+# every leaf across all families (attn KV, mamba/rwkv state, encdec cross-KV).
+CACHE_BATCH_AXIS = 1
+
+
+def single_slot_cache(cache, batch_axis: int = CACHE_BATCH_AXIS):
+    """A zeroed copy of ``cache`` with the batch axis shrunk to one slot."""
+    return jax.tree_util.tree_map(
+        lambda c: jnp.zeros(
+            c.shape[:batch_axis] + (1,) + c.shape[batch_axis + 1:], c.dtype),
+        cache)
+
+
+def insert_cache_slot(cache, single, slot, batch_axis: int = CACHE_BATCH_AXIS):
+    """Write a batch-1 cache pytree into slot ``slot`` of a batched cache.
+
+    ``slot`` may be traced; other slots' buffers are untouched, which is what
+    lets a serving engine admit one request without re-prefilling the rest.
+    """
+    return jax.tree_util.tree_map(
+        lambda big, sm: jax.lax.dynamic_update_slice_in_dim(
+            big, sm.astype(big.dtype), slot, axis=batch_axis),
+        cache, single)
+
+
+def make_prefill_slot(prefill):
+    """Derive a single-slot prefill-insert from a batched ``prefill``.
+
+    The returned fn runs ONE request (tokens ``(1, S)``) through a batch-1
+    scratch cache and writes the result into slot ``slot`` of the live batched
+    cache. Returns ``(logits (V,), new_cache, new_len scalar)``.
+    """
+    def prefill_slot(params, batch, cache, slot):
+        small = single_slot_cache(cache)
+        logits, filled, clen = prefill(params, batch, small)
+        return logits[0], insert_cache_slot(cache, filled, slot), clen[0]
+    return prefill_slot
+
+
+# =============================================================================
 # Param init helpers
 # =============================================================================
 def trunc_normal(key, shape, std=0.02, dtype=jnp.float32):

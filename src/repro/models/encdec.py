@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.core.qat import QATConfig
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.models.common import ModelConfig, QuantCtx, stacked_init, trunc_normal
+from repro.models.common import (ModelConfig, QuantCtx, make_prefill_slot,
+                                 stacked_init, trunc_normal)
 from repro.sharding.rules import shard_act
 
 
@@ -253,4 +254,5 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None):
         cache_axes=cache_axes,
         prefill=prefill,
         serve_step=serve_step,
+        prefill_slot=make_prefill_slot(prefill),
     )

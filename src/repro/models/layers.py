@@ -200,15 +200,15 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
         k, v = cross_kv
 
     if kv_cache is not None:
-        # decode: write this token's k/v at cache_len, attend over the cache.
-        # Batch steps are aligned (continuous-batching engine keeps slots in
-        # lockstep per micro-batch), so one scalar write index suffices.
+        # decode: write this token's k/v at each slot's own cache_len, attend
+        # over the cache. Slots advance independently (continuous batching
+        # admits/retires requests per slot), so the write index is per batch
+        # element — the vmapped update lowers to a scatter.
         kc, vc = kv_cache
-        idx = cache_len[0]
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
-                                                 idx, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
-                                                 idx, axis=1)
+        upd = jax.vmap(
+            functools.partial(jax.lax.dynamic_update_slice_in_dim, axis=0))
+        kc = upd(kc, k.astype(kc.dtype), cache_len)
+        vc = upd(vc, v.astype(vc.dtype), cache_len)
         out = decode_attention(q, kc, vc, cache_len + 1,
                                window=cfg.sliding_window)
         new_kv = (kc, vc)

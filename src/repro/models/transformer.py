@@ -24,8 +24,8 @@ from repro.core.qat import QATConfig
 from repro.models import layers as L
 from repro.models import rwkv as R
 from repro.models import ssm as S
-from repro.models.common import (ModelConfig, QuantCtx, stacked_init,
-                                 trunc_normal)
+from repro.models.common import (ModelConfig, QuantCtx, make_prefill_slot,
+                                 stacked_init, trunc_normal)
 from repro.sharding.rules import shard_act
 
 
@@ -386,6 +386,10 @@ class ModelApi:
     cache_axes: Callable
     prefill: Callable             # (params, batch) -> (logits, cache, len)
     serve_step: Callable          # (params, batch, cache, len) -> (logits, cache)
+    prefill_slot: Callable = None  # (params, batch(1,S), cache, slot)
+    #                                -> (logits (V,), cache, len scalar);
+    #                                single-request prefill-insert: fills one
+    #                                slot without touching the others
 
 
 def _cache_for_block(cfg: ModelConfig, j: int, b: int, s_max: int, dtype):
@@ -517,4 +521,5 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         cache_axes=cache_axes,
         prefill=prefill,
         serve_step=serve_step,
+        prefill_slot=make_prefill_slot(prefill),
     )

@@ -1,18 +1,41 @@
-"""Elastic-precision serving engine (paper §3.5 inference scheme).
+"""Packed-weight continuous-batching engine for elastic-precision serving.
 
-One anchor checkpoint (MXINT8/MXFP8) is held in memory; request batches are
-served at whatever precision the runtime policy picks. Format switches cost
-one Slice-and-Scale pass (packed-domain, no FP32 re-expansion) and are cached
-per format — switching between cached formats is free.
+Implements the paper's §3.5 inference scheme end-to-end: one anchor
+checkpoint (MXINT8/MXFP8) is resident; per-format weight caches hold
+**packed** pytrees built by ``make_packed_params`` — MXTensor leaves (int8
+codes + E8M0 scales) for >=5-bit formats, nibble-packed ``PackedInt4Leaf``
+for MXINT4. The decode tick runs ``make_packed_serve_step``, which densifies
+*inside* the jitted step: XLA's HBM weight traffic is the packed bytes and
+the dequant fuses into the consuming matmuls, so decode — HBM-bound on
+weight reads — streams 2x/4x fewer bytes at mxint8/mxint4 than dense bf16
+(the Pallas ``mx_matmul`` kernels implement the same contract explicitly on
+TPU). Deriving a new format costs one packed-domain Slice-and-Scale pass and
+is cached; switching between cached formats is free.
 
-The engine runs a continuous-batching decode loop: slots hold (tokens,
-cache_len); prefill admits new requests into free slots; one fused
-serve_step advances every active slot per tick.
+Slot lifecycle (continuous batching):
+
+  admit   — each request is prefilled individually via
+            ``ModelApi.prefill_slot`` into a free slot; active slots are
+            never re-prefilled.
+  decode  — one fused serve_step advances every slot per tick; free/finished
+            slots are masked (their cache_len stops advancing and their
+            sampled tokens are dropped).
+  retire  — a slot frees the moment its request reaches ``max_new`` or cache
+            capacity, and is re-admissible on the very next tick.
+
+Format selection is **batch-pinned**: the policy picks once, when the engine
+transitions from drained to busy, and every request admitted while any slot
+is live inherits that format. Numerics therefore never switch mid-sequence
+and ``Request.fmt_used`` is exact for every generated token, not just the
+admission-time value.
+
+Token draining is host-side: one device->host transfer of the whole
+next-token vector per tick (``np.asarray``), with per-slot lengths mirrored
+in host counters — no per-slot ``int(...)`` device syncs in the tick loop.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
 import jax
@@ -21,8 +44,16 @@ import numpy as np
 
 from repro.core.anchor import AnchorModel, convert, materialize
 from repro.core.formats import get_format
+from repro.core.mx import MXTensor
 from repro.models.transformer import ModelApi
+from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
+                                       make_packed_params,
+                                       make_packed_prefill_slot,
+                                       make_packed_serve_step,
+                                       weight_stream_bytes)
 from repro.serve.policy import FormatPolicy
+
+DENSE_BF16 = "bf16"   # pseudo-format: dense anchor-precision weights
 
 
 @dataclasses.dataclass
@@ -36,34 +67,71 @@ class Request:
 
 
 class ElasticEngine:
+    """Continuous-batching engine serving from packed MX weight caches.
+
+    ``packed=False`` swaps every format's weights for their densified bf16
+    equivalent (same codes, dequantized ahead of time) — the reference path
+    for packed-vs-dense equivalence tests and roofline baselines. The
+    pseudo-format ``"bf16"`` serves dense anchor-precision weights.
+    """
+
     def __init__(self, api: ModelApi, anchor: AnchorModel, *,
                  batch_slots: int = 4, max_len: int = 256,
                  policy: Optional[FormatPolicy] = None,
-                 param_template=None):
+                 param_template=None, packed: bool = True):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
         self.max_len = max_len
         self.policy = policy or FormatPolicy(anchor.fmt_name)
+        self.packed = packed
         self._template = param_template if param_template is not None else \
             jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
-        self._weights: Dict[str, object] = {}       # fmt -> dense params
+        self._block_size = anchor_block_size(anchor)
+        self._weights: Dict[str, object] = {}       # fmt -> serving pytree
         self._fmt_swaps = 0
+        self._ticks = 0
+        self._tokens_out = 0
         self.current_fmt: Optional[str] = None
-        self._prefill = jax.jit(api.prefill)
-        self._step = jax.jit(api.serve_step)
+        # Jitted entry points. Dense and packed trees have different pytree
+        # structures, so jit caches one executable per cached format.
+        self._dense_step = jax.jit(api.serve_step)
+        self._dense_prefill_slot = jax.jit(api.prefill_slot)
+        self._packed_step = jax.jit(
+            make_packed_serve_step(api, self._block_size))
+        self._packed_prefill_slot = jax.jit(
+            make_packed_prefill_slot(api, self._block_size))
 
     # ---- weights ----------------------------------------------------------
+    def _serves_packed(self, fmt_name: str) -> bool:
+        return self.packed and fmt_name != DENSE_BF16
+
     def weights_for(self, fmt_name: str):
-        """Dense bf16 params at `fmt_name`, derived from the anchor via SS."""
+        """Serving weights at ``fmt_name`` (packed containers by default).
+
+        Cache miss = one Slice-and-Scale pass from the anchor (+ nibble
+        packing at 4 bits); hits are free.
+        """
         if fmt_name not in self._weights:
-            fmt = get_format(fmt_name, get_format(self.anchor.fmt_name)
-                             .block_size)
-            low = convert(self.anchor, fmt)          # slice-and-scale
-            self._weights[fmt_name] = materialize(
-                low, self._template, dtype=self.api.cfg.compute_dtype)
+            if self._serves_packed(fmt_name):
+                w = make_packed_params(self.anchor, self._template,
+                                       target_fmt=fmt_name,
+                                       dtype=self.api.cfg.compute_dtype)
+            else:
+                w = self.dense_weights_for(fmt_name)
+            self._weights[fmt_name] = w
             self._fmt_swaps += 1
         return self._weights[fmt_name]
+
+    def dense_weights_for(self, fmt_name: str):
+        """Dense reference weights at ``fmt_name`` — numerically identical to
+        the packed tree (same codes, dequantized eagerly). Not cached."""
+        model = self.anchor
+        if fmt_name not in (DENSE_BF16, self.anchor.fmt_name):
+            model = convert(self.anchor,
+                            get_format(fmt_name, self._block_size))
+        return materialize(model, self._template,
+                           dtype=self.api.cfg.compute_dtype)
 
     def set_format(self, fmt_name: str):
         self.current_fmt = fmt_name
@@ -72,61 +140,101 @@ class ElasticEngine:
     # ---- serving loop -----------------------------------------------------
     def generate(self, requests: List[Request], greedy: bool = True,
                  fmt_override: Optional[str] = None) -> List[Request]:
-        """Serve a list of requests to completion (continuous batching)."""
+        """Serve requests to completion with slot-level continuous batching."""
         pending = list(requests)
         active: List[Optional[Request]] = [None] * self.slots
+        slot_len = [0] * self.slots        # host mirror of cache_len
         b = self.slots
 
         cache = self.api.init_cache(b, self.max_len)
         cache_len = jnp.zeros((b,), jnp.int32)
         tokens = jnp.zeros((b, 1), jnp.int32)
+        pinned: Optional[str] = None       # format for this batch's lifetime
 
         while pending or any(a is not None for a in active):
-            fmt = fmt_override or self.policy.pick(
-                queue_depth=len(pending),
-                active=sum(a is not None for a in active))
-            params = self.set_format(fmt)
+            if pinned is None:             # engine drained: re-pick format
+                pinned = fmt_override or self.policy.pick(
+                    queue_depth=len(pending), active=0)
+            params = self.set_format(pinned)
+            use_packed = self._serves_packed(pinned)
+            prefill_slot = self._packed_prefill_slot if use_packed \
+                else self._dense_prefill_slot
+            step = self._packed_step if use_packed else self._dense_step
 
-            # admit: for simplicity slots refill together when all free
-            if all(a is None for a in active) and pending:
-                batch_reqs = pending[:b]
-                pending = pending[b:]
-                maxlen = max(len(r.prompt) for r in batch_reqs)
-                toks = np.zeros((b, maxlen), np.int32)
-                for i, r in enumerate(batch_reqs):
-                    toks[i, -len(r.prompt):] = r.prompt   # left-pad
+            # ---- admit: one request per free slot, active slots untouched
+            for i in range(b):
+                if active[i] is not None or not pending:
+                    continue
+                r = pending.pop(0)
+                prompt = np.asarray(r.prompt, np.int32)
+                assert prompt.size < self.max_len - 1, \
+                    f"prompt ({prompt.size}) exceeds cache ({self.max_len})"
+                logits, cache, new_len = prefill_slot(
+                    params, {"tokens": jnp.asarray(prompt[None])}, cache, i)
+                cache_len = cache_len.at[i].set(new_len)
+                slot_len[i] = prompt.size
+                first = int(self._sample(logits[None], greedy)[0])
+                tokens = tokens.at[i, 0].set(first)
+                r.fmt_used = pinned        # pinned for the whole sequence
+                r.out_tokens.append(first)
+                self._tokens_out += 1
+                if len(r.out_tokens) >= r.max_new:
+                    r.done = True          # degenerate max_new<=1
+                else:
                     active[i] = r
-                    r.fmt_used = fmt
-                cache = self.api.init_cache(b, self.max_len)
-                logits, cache, cache_len = self._prefill(
-                    params, {"tokens": jnp.asarray(toks)}, cache)
-                nxt = jnp.argmax(logits, -1) if greedy else \
-                    jax.random.categorical(jax.random.PRNGKey(0), logits)
-                tokens = nxt[:, None].astype(jnp.int32)
-                for i, r in enumerate(batch_reqs):
-                    r.out_tokens.append(int(nxt[i]))
+
+            if all(a is None for a in active):
+                pinned = None              # drained; next wave re-picks
                 continue
 
-            logits, cache = self._step(params, {"tokens": tokens}, cache,
-                                       cache_len)
-            cache_len = cache_len + 1
-            nxt = jnp.argmax(logits, -1)
+            # ---- decode tick: fused step over all slots, free slots masked
+            mask = np.asarray([a is not None for a in active], np.int32)
+            logits, cache = step(params, {"tokens": tokens}, cache, cache_len)
+            cache_len = cache_len + jnp.asarray(mask)
+            nxt = self._sample(logits, greedy)
             tokens = nxt[:, None].astype(jnp.int32)
+            self._ticks += 1
+
+            # ---- retire: ONE host transfer per tick drains every slot
+            drained = np.asarray(nxt)
             for i, r in enumerate(active):
                 if r is None:
                     continue
-                r.out_tokens.append(int(nxt[i]))
+                slot_len[i] += 1
+                r.out_tokens.append(int(drained[i]))
+                self._tokens_out += 1
                 if len(r.out_tokens) >= r.max_new or \
-                        int(cache_len[i]) >= self.max_len - 1:
+                        slot_len[i] >= self.max_len - 1:
                     r.done = True
-                    active[i] = None
+                    active[i] = None       # slot re-admissible next tick
             if all(a is None for a in active):
-                # batch drained; next loop admits new requests
-                pass
+                pinned = None
         return requests
 
+    def _sample(self, logits, greedy: bool):
+        if greedy:
+            return jnp.argmax(logits, -1)
+        return jax.random.categorical(jax.random.PRNGKey(self._ticks), logits)
+
+    # ---- introspection ----------------------------------------------------
     @property
     def stats(self):
-        return {"formats_cached": sorted(self._weights),
-                "fmt_swaps": self._fmt_swaps,
-                "current": self.current_fmt}
+        def containers(tree):
+            kinds = {type(l).__name__
+                     for l in jax.tree_util.tree_leaves(
+                         tree, is_leaf=lambda x: isinstance(
+                             x, (MXTensor, PackedInt4Leaf)))
+                     if isinstance(l, (MXTensor, PackedInt4Leaf))}
+            return sorted(kinds) or ["dense"]
+
+        return {
+            "formats_cached": sorted(self._weights),
+            "containers": {f: containers(t)
+                           for f, t in self._weights.items()},
+            "weight_bytes": {f: weight_stream_bytes(t)
+                             for f, t in self._weights.items()},
+            "fmt_swaps": self._fmt_swaps,
+            "ticks": self._ticks,
+            "tokens_out": self._tokens_out,
+            "current": self.current_fmt,
+        }

@@ -56,27 +56,41 @@ def unpack_leaf_int4(p: PackedInt4Leaf, block_size: int,
     return dequantize(t, dtype=dtype)
 
 
+def anchor_block_size(anchor: AnchorModel) -> int:
+    """The block size the anchor was actually quantized at."""
+    for t in anchor.quantized.values():
+        return t.fmt.block_size
+    return get_format(anchor.fmt_name).block_size
+
+
 def make_packed_params(anchor: AnchorModel, template, *,
-                       target_bits: int = 8, dtype=jnp.bfloat16):
+                       target_bits: int = 8, target_fmt: str | None = None,
+                       dtype=jnp.bfloat16):
     """Params pytree whose quantized leaves are packed MX containers.
 
-    target_bits 8: MXTensor leaves (int8 codes). target_bits 4: the anchor is
-    Slice-and-Scaled to mxint4 first, then nibble-packed.
+    ``target_fmt`` names any same-kind format at or below the anchor's
+    precision: the anchor is Slice-and-Scaled to it (packed domain, no FP32
+    round-trip) and the result kept as MXTensor leaves — except 4-bit MXINT,
+    which is additionally nibble-packed (``PackedInt4Leaf``, 2 codes/byte).
+    Legacy ``target_bits`` (8 = anchor as-is, 4 = mxint4) is honored when
+    ``target_fmt`` is None.
     """
     from repro.core.anchor import convert
-    fmt8 = get_format(anchor.fmt_name)
-    model = anchor
-    if target_bits == 4:
-        model = convert(anchor, get_format("mxint4", fmt8.block_size))
+    bs = anchor_block_size(anchor)
+    if target_fmt is None:
+        target_fmt = anchor.fmt_name if target_bits == 8 else "mxint4"
+    fmt_t = get_format(target_fmt, bs)
+    model = anchor if fmt_t.name == anchor.fmt_name \
+        else convert(anchor, fmt_t)
+    pack4 = fmt_t.kind == "int" and fmt_t.bits == 4
 
-    flat_t = jax.tree_util.tree_flatten_with_path(template)
-    leaves, treedef = flat_t
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
     for pth, leaf in leaves:
         k = jax.tree_util.keystr(pth)
         if k in model.quantized:
             t = model.quantized[k]
-            out.append(pack_leaf_int4(t) if target_bits == 4 else t)
+            out.append(pack_leaf_int4(t) if pack4 else t)
         else:
             w = model.raw[k]
             out.append(w.astype(dtype)
@@ -149,10 +163,35 @@ def packed_param_shardings(packed_abstract, axes_tree, mesh, rules=None):
                   for p, l in leaves])
 
 
-def make_packed_serve_step(api, block_size: int = 32):
-    """serve_step over packed params (the roofline-optimized decode path)."""
-    def step(packed_params, batch, cache, cache_len):
+def make_packed_fn(api, fn, block_size: int = 32):
+    """Wrap a ``fn(params, *rest)`` entry point to take packed params.
+
+    Densification runs *inside* the (to-be-jitted) call, so the resident /
+    HBM-streamed weights are the packed bytes and the dequant fuses into the
+    consuming matmuls.
+    """
+    def wrapped(packed_params, *rest):
         params = densify_params(packed_params, block_size,
                                 api.cfg.compute_dtype)
-        return api.serve_step(params, batch, cache, cache_len)
-    return step
+        return fn(params, *rest)
+    return wrapped
+
+
+def make_packed_serve_step(api, block_size: int = 32):
+    """serve_step over packed params (the roofline-optimized decode path)."""
+    return make_packed_fn(api, api.serve_step, block_size)
+
+
+def make_packed_prefill_slot(api, block_size: int = 32):
+    """Single-slot prefill-insert over packed params (see ModelApi)."""
+    return make_packed_fn(api, api.prefill_slot, block_size)
+
+
+def weight_stream_bytes(params) -> int:
+    """Device bytes one decode tick must stream for the weight pytree.
+
+    For packed trees this counts codes + scales at their stored width (uint8
+    nibble-pairs for PackedInt4Leaf), i.e. the roofline weight-read term.
+    """
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,39 @@
+"""Fallback when ``hypothesis`` is not installed (see requirements-dev.txt).
+
+Property tests decorated with ``hypothesis.given(...)`` become zero-argument
+tests that skip at run time; plain unit tests in the same module keep running.
+Strategy constructors (``st.*``, ``hnp.*``) evaluate at import time inside the
+``given(...)`` call, so they just return inert placeholders.
+"""
+import pytest
+
+
+class _AnyStrategy:
+    """Accepts any attribute/call chain, returns an inert placeholder."""
+
+    def __getattr__(self, name):
+        return self
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+
+class _HypothesisStub:
+    HealthCheck = _AnyStrategy()
+
+    def given(self, *args, **kwargs):
+        def deco(fn):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(self, *args, **kwargs):
+        return lambda fn: fn
+
+
+hypothesis = _HypothesisStub()
+st = _AnyStrategy()
+hnp = _AnyStrategy()

@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.train.compression import (compressed_bytes, ef_compress_leaf,
                                      compressed_pod_allreduce,
-                                     init_error_state)
+                                     init_error_state, shard_map)
 from repro.core.formats import get_format
 from repro.core.mx import dequantize
 
@@ -63,7 +63,6 @@ def test_pod_allreduce_shard_map_single_device():
     err = init_error_state(grads)
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
 
     fn = shard_map(
         functools.partial(compressed_pod_allreduce, fmt_name="mxint8"),

@@ -1,7 +1,10 @@
 """MX quantize/dequantize: unit + hypothesis property tests."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:      # property tests skip; unit tests below still run
+    from _hypothesis_stub import hnp, hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

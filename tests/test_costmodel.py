@@ -14,6 +14,7 @@ import pytest
 
 from repro.configs.shapes import ShapeSpec
 from repro.launch import costmodel as cm
+from repro.launch._compat import compiled_cost
 from repro.models import get_model
 from repro.models.common import ModelConfig
 
@@ -27,7 +28,7 @@ def _tiny_dense():
 
 def _compiled_flops(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
-    return float(c.cost_analysis().get("flops", 0.0))
+    return float(compiled_cost(c).get("flops", 0.0))
 
 
 def test_prefill_flops_close():

@@ -1,4 +1,5 @@
-"""Elastic serving engine: anchor -> SS -> serve at multiple precisions."""
+"""Elastic serving engine: packed-weight continuous batching, slot-level
+admission, batch-pinned formats, packed-vs-dense equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,26 +15,100 @@ from repro.serve.policy import FormatPolicy
 QAT = QATConfig(formats=("mxint4", "mxint8"), anchor="mxint8", block_size=32)
 
 
-def _engine(arch="smollm-135m", slots=2, max_len=48):
+def _engine(arch="smollm-135m", slots=2, max_len=48, **kw):
     cfg = get_reduced(arch)
     api = get_model(cfg, None)
     params = api.init_params(jax.random.PRNGKey(0))
     anchor = make_anchor(params, QAT)
     eng = ElasticEngine(api, anchor, batch_slots=slots, max_len=max_len,
-                        param_template=params)
+                        param_template=params, **kw)
     return cfg, api, params, eng
+
+
+def _reqs(cfg, n, max_new=5, plen=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, plen)
+                    .astype(np.int32), max_new=max_new) for i in range(n)]
 
 
 def test_generate_batched_requests():
     cfg, api, params, eng = _engine()
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(
-        np.int32), max_new=5) for i in range(4)]
-    out = eng.generate(reqs, fmt_override="mxint8")
+    out = eng.generate(_reqs(cfg, 4), fmt_override="mxint8")
     for r in out:
         assert len(r.out_tokens) >= 5 or r.done
         assert r.fmt_used == "mxint8"
     assert eng.stats["formats_cached"] == ["mxint8"]
+
+
+def test_stats_report_packed_containers():
+    """The serving tree really is packed: MXTensor at 8 bits, nibble-packed
+    PackedInt4Leaf at 4 bits, and the byte footprint orders 4 < 8 < bf16."""
+    cfg, api, params, eng = _engine()
+    eng.generate(_reqs(cfg, 1, max_new=2), fmt_override="mxint8")
+    eng.generate(_reqs(cfg, 1, max_new=2), fmt_override="mxint4")
+    eng.generate(_reqs(cfg, 1, max_new=2), fmt_override="bf16")
+    st = eng.stats
+    assert st["containers"]["mxint8"] == ["MXTensor"]
+    assert st["containers"]["mxint4"] == ["PackedInt4Leaf"]
+    assert st["containers"]["bf16"] == ["dense"]
+    wb = st["weight_bytes"]
+    assert wb["mxint4"] < wb["mxint8"] < wb["bf16"]
+
+
+@pytest.mark.parametrize("fmt", ["mxint8", "mxint4"])
+def test_packed_matches_dense_token_for_token(fmt):
+    """Densify-inside-jit serves the same codes as the eager dense path:
+    greedy token streams agree exactly at mxint8 and mxint4."""
+    streams = {}
+    for packed in (True, False):
+        cfg, api, params, eng = _engine(packed=packed)
+        reqs = _reqs(cfg, 3, max_new=6, seed=7)
+        eng.generate(reqs, fmt_override=fmt)
+        streams[packed] = [r.out_tokens for r in reqs]
+    assert streams[True] == streams[False]
+
+
+def test_staggered_arrivals_finish_independently():
+    """Requests with different lengths retire per slot; a later arrival is
+    admitted into the freed slot WITHOUT re-prefilling the active one (the
+    long request's token stream is identical to a solo run)."""
+    cfg, api, params, eng_solo = _engine()
+    solo = Request(rid=0, prompt=_reqs(cfg, 1, seed=3)[0].prompt, max_new=10)
+    eng_solo.generate([solo], fmt_override="mxint8")
+
+    cfg2, api2, params2, eng = _engine()
+    prompts = _reqs(cfg2, 3, seed=3)
+    lens = [10, 3, 4]
+    reqs = [Request(rid=i, prompt=prompts[i].prompt, max_new=lens[i])
+            for i in range(3)]
+    eng.generate(reqs, fmt_override="mxint8")     # slots=2: rid2 waits
+    assert [len(r.out_tokens) for r in reqs] == lens
+    assert all(r.done for r in reqs)
+    assert reqs[0].out_tokens == solo.out_tokens
+
+
+def test_format_pinned_for_batch_lifetime():
+    """Regression: the policy may want to switch formats as the queue drains,
+    but numerics never change mid-sequence — every request admitted while the
+    batch is live shares one pinned format, and the policy is consulted once
+    per drained->busy transition."""
+    cfg, api, params, eng = _engine()
+    eng.policy = FormatPolicy(anchor="mxint8",
+                              ladder=((4, "mxint4"), (0, "mxint8")),
+                              hysteresis=0)
+    reqs = _reqs(cfg, 6, max_new=4)
+    # staggered lengths: some slot stays busy until the queue is empty, so
+    # this is ONE batch even though the queue drains below the ladder step
+    for i, r in enumerate(reqs):
+        r.max_new = [9, 3, 4, 5, 6, 7][i]
+    eng.generate(reqs)                 # queue=6 at pick time -> mxint4
+    assert {r.fmt_used for r in reqs} == {"mxint4"}
+    assert eng.policy.history == ["mxint4"]        # one pick per wave
+    assert eng.stats["formats_cached"] == ["mxint4"]
+
+    late = _reqs(cfg, 1, max_new=3, seed=9)
+    eng.generate(late)                 # fresh wave, queue=1 -> mxint8
+    assert late[0].fmt_used == "mxint8"
 
 
 def test_format_switch_via_policy():
@@ -41,26 +116,28 @@ def test_format_switch_via_policy():
     eng.policy = FormatPolicy(anchor="mxint8",
                               ladder=((3, "mxint4"), (0, "mxint8")),
                               hysteresis=0)
-    rng = np.random.default_rng(1)
-    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6).astype(
-        np.int32), max_new=3) for i in range(6)]
-    eng.generate(reqs)
+    eng.generate(_reqs(cfg, 6, max_new=3, plen=6, seed=1))
     # deep queue at admission -> low precision used at least once
     assert "mxint4" in eng.stats["formats_cached"]
 
 
 def test_ss_weights_match_direct_ptq():
-    """Engine weights at mxint4 == direct quantization path within 1 ulp."""
+    """Engine dense view at mxint4 == direct SS conversion, bit-exact; the
+    packed tree densifies to the same values (same codes)."""
     from repro.core import dequantize, get_format, quantize, slice_and_scale
+    from repro.serve.packed_params import densify_params
     cfg, api, params, eng = _engine()
-    w4 = eng.weights_for("mxint4")
-    # pick one quantized leaf and compare against hand conversion
+    w4_dense = eng.dense_weights_for("mxint4")
     w = params["blocks"][0]["attn"]["wq"][0]          # (d, H*hd)
     t8 = quantize(w, get_format("mxint8", 32), axis=0)
     t4 = slice_and_scale(t8, get_format("mxint4", 32))
     want = dequantize(t4, dtype=jnp.float32)
-    got = w4["blocks"][0]["attn"]["wq"][0].astype(jnp.float32)
+    got = w4_dense["blocks"][0]["attn"]["wq"][0].astype(jnp.float32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+    w4_packed = densify_params(eng.weights_for("mxint4"), 32, jnp.float32)
+    got_p = w4_packed["blocks"][0]["attn"]["wq"][0]
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want),
                                rtol=0, atol=0)
 
 
@@ -92,13 +169,32 @@ def test_greedy_output_consistency_high_precision():
     assert agree >= 5, (r8.out_tokens, fp_tokens)
 
 
+def test_prefill_slot_leaves_other_slots_alone():
+    """ModelApi.prefill_slot writes exactly one slot of the batched cache."""
+    cfg = get_reduced("smollm-135m")
+    api = get_model(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    cache = api.init_cache(2, 32)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab,
+                                                         (1, 8)), jnp.int32)
+    _, c1, l1 = jax.jit(api.prefill_slot)(params, {"tokens": toks}, cache, 0)
+    assert int(l1) == 8
+    for a, b in zip(jax.tree_util.tree_leaves(c1),
+                    jax.tree_util.tree_leaves(cache)):
+        # slot 1 (batch axis 1) untouched
+        np.testing.assert_array_equal(np.asarray(a[:, 1]),
+                                      np.asarray(b[:, 1]))
+    assert any(np.abs(np.asarray(a[:, 0])).sum() > 0
+               for a in jax.tree_util.tree_leaves(c1))
+
+
 def test_policy_ladder_and_hysteresis():
     p = FormatPolicy(anchor="mxint8",
                      ladder=((32, "mxint4"), (8, "mxint6"), (0, "mxint8")),
                      hysteresis=2)
     assert p.pick(0) == "mxint8"
     assert p.pick(10) == "mxint8"      # hysteresis holds once
-    assert p.pick(10) == "mxint6"      # then switches
+    assert p.pick(10) == "mxint6"
     assert p.pick(100) == "mxint6"
     assert p.pick(100) == "mxint4"
 
