@@ -3,17 +3,31 @@ bytes accounting (the HBM-traffic contract the TPU kernels are built to).
 
 CPU wall-clock is not TPU performance; it validates that the fused paths do
 less work than the unfused ones and provides the us_per_call CSV row format.
+
+Extras:
+  --smoke     fast CI gate: asserts the qmatmul dispatch layer really routes
+              to the Pallas kernels (trace-time counters) and matches the
+              dense reference — a silent regression to the densify fallback
+              fails the build.
+  --autotune  sweep tile candidates for the serving GEMM shapes and register
+              the winners in the dispatch tile cache (per (shape, fmt)).
 """
+import argparse
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+sys.path.insert(0, "src")
 
-from repro.core import get_format
-from repro.core.mx import dequantize, quantize, quantize_dequantize
-from repro.core.slice_scale import slice_and_scale
-from repro.kernels import ops
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.core import get_format                             # noqa: E402
+from repro.core.mx import (dequantize, quantize,              # noqa: E402
+                           quantize_dequantize)
+from repro.core.slice_scale import slice_and_scale            # noqa: E402
+from repro.kernels import dispatch, ops                       # noqa: E402
+from repro.serve.packed_params import pack_leaf_int4          # noqa: E402
 
 
 def timeit(fn, *args, n=20):
@@ -26,7 +40,111 @@ def timeit(fn, *args, n=20):
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _leaf_for(w, fmt):
+    t = quantize(w, fmt, axis=0)
+    if fmt.kind == "int" and fmt.bits == 4:
+        return pack_leaf_int4(t)
+    return t
+
+
+# =============================================================================
+# qmatmul tile autotuning — winners cached per (shape, fmt) in the dispatch
+# tile table so subsequent traces pick them up automatically.
+# =============================================================================
+def _tile_candidates(m, k, n, fmt, kind):
+    bs = fmt.block_size
+    n_eff = n // 2 if kind == "int4" else n
+    cands = []
+    for tm in (8, 32, 128):
+        for tn in (64, 128, 256):
+            for tk in (bs, 4 * bs, 8 * bs):
+                if tm <= max(m, 8) * 4 and tn <= max(n_eff, 64) * 2 \
+                        and tk <= max(k, bs) * 2:
+                    cands.append((tm, tn, tk))
+    base = dispatch.select_tiles(m, k, n, fmt, kind)
+    return [base] + [c for c in cands if c != base]
+
+
+def autotune_qmatmul(m, k, n, fmt_name, *, n_iter=5, verbose=False):
+    """Sweep tile candidates for one (M, K, N, fmt) qmatmul; register the
+    winner via ``dispatch.register_tiles``. Returns (tiles, us_per_call)."""
+    fmt = get_format(fmt_name, 32)
+    int4 = fmt.kind == "int" and fmt.bits == 4
+    kind = "int4" if int4 else "mx"
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    leaf = _leaf_for(w, fmt)
+
+    best, best_us = None, float("inf")
+    for tiles in _tile_candidates(m, k, n, fmt, kind):
+        fn = jax.jit(lambda xx, tiles=tiles: dispatch.qmatmul(
+            xx, leaf, mode="pallas", tiles=tiles))
+        try:
+            us = timeit(fn, x, n=n_iter)
+        except Exception:          # tile combo the kernel rejects: skip
+            continue
+        if verbose:
+            print(f"#   {fmt_name} ({m},{k},{n}) tiles={tiles}: {us:.1f}us")
+        if us < best_us:
+            best, best_us = tiles, us
+    if best is None:
+        raise RuntimeError(
+            f"autotune: every tile candidate failed for "
+            f"{fmt_name} ({m},{k},{n}) — run one candidate outside the "
+            "sweep to see the kernel error")
+    dispatch.register_tiles(m, k, n, fmt_name, best, kind)
+    return best, best_us
+
+
+def run_autotune(verbose=True):
+    shapes = [(8, 1024, 4096), (8, 4096, 1024), (64, 1024, 1024)]
+    rows = []
+    for fmt_name in ("mxint8", "mxint4"):
+        for (m, k, n) in shapes:
+            tiles, us = autotune_qmatmul(m, k, n, fmt_name, verbose=verbose)
+            rows.append((f"autotune_{fmt_name}_{m}x{k}x{n}", us,
+                         f"tm{tiles[0]}_tn{tiles[1]}_tk{tiles[2]}"))
+    return rows
+
+
+# =============================================================================
+# --smoke: the dispatch layer must actually hit the Pallas kernels
+# =============================================================================
+def smoke():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 160)).astype(np.float32))
+    for fmt_name, counter in (("mxint8", "pallas"), ("mxfp8", "pallas"),
+                              ("mxint4", "pallas_int4")):
+        fmt = get_format(fmt_name, 32)
+        leaf = _leaf_for(w, fmt)
+        t = quantize(w, fmt, axis=0)
+        want = np.asarray(x @ dequantize(t, jnp.float32))
+        dispatch.reset_stats()
+        got = np.asarray(dispatch.qmatmul(x, leaf, mode="pallas"))
+        st = dispatch.stats()
+        assert st[counter] >= 1 and st["densify"] == 0, (
+            f"{fmt_name}: dispatch regressed to the fallback: {st}")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+        ref = np.asarray(dispatch.qmatmul(x, leaf, mode="densify"))
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-4)
+        print(f"smoke {fmt_name}: pallas path live, parity ok ({st})")
+    print("smoke: OK")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast dispatch-layer gate (CI)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep qmatmul tiles for the serving shapes")
+    args = ap.parse_args()
+
+    if args.smoke:
+        smoke()
+        return
+
     rng = np.random.default_rng(0)
     shape = (1024, 4096)
     w = jnp.asarray(rng.normal(size=shape).astype(np.float32))
@@ -51,6 +169,16 @@ def main():
     rows.append(("xla_dequant_matmul_int8", timeit(f_deq_mm, x, t8),
                  "XLA fused"))
 
+    # dispatch layer: fused Pallas vs densify fallback on the same leaf
+    f_disp_p = jax.jit(lambda xx: dispatch.qmatmul(x=xx, leaf=t8,
+                                                   mode="pallas"))
+    rows.append(("dispatch_qmatmul_pallas", timeit(f_disp_p, x, n=3),
+                 "interpret on cpu"))
+    f_disp_d = jax.jit(lambda xx: dispatch.qmatmul(x=xx, leaf=t8,
+                                                   mode="densify"))
+    rows.append(("dispatch_qmatmul_densify", timeit(f_disp_d, x),
+                 "XLA fallback"))
+
     # Pallas kernels (interpret mode on CPU — correctness-path timing only)
     codes, scales = ops.to_weight_layout(t8)
     rows.append(("pallas_mx_matmul_interp",
@@ -61,6 +189,9 @@ def main():
                  timeit(lambda: ops.fake_quant(w, fmt8, axis=0,
                                                interpret=True), n=3),
                  "interpret=True"))
+
+    if args.autotune:
+        rows.extend(run_autotune())
 
     # bytes accounting: serving weight-read sizes per format
     n_el = int(np.prod(shape))

@@ -5,11 +5,13 @@ A burst of requests hits the engine; the FormatPolicy watches queue depth at
 each batch admission and drops precision under load (mxint8 -> 6 -> 4),
 recovering when the queue drains. Every format is served from a single
 MXINT8 anchor via Slice-and-Scale, and the decode tick reads *packed* MX
-codes (MXTensor / nibble-packed PackedInt4Leaf) — dequantization happens
-inside the jitted step, so HBM weight traffic is the packed bytes. Requests
-are admitted into individual slots (staggered arrivals never re-prefill
-active sequences), and the format is pinned per batch, never switched
-mid-sequence.
+codes (MXTensor / split-N nibble-packed PackedInt4Leaf) — on TPU each
+projection streams them through the fused Pallas dequant-GEMM
+(`kernels.dispatch.qmatmul`); elsewhere the dequant runs inside the jitted
+step — either way HBM weight traffic is the packed bytes. Requests are
+admitted into individual slots (staggered arrivals never re-prefill active
+sequences; prompts pad to power-of-two buckets so prefill compiles once per
+bucket), and the format is pinned per batch, never switched mid-sequence.
 """
 import sys
 
@@ -65,8 +67,11 @@ def main():
     print(f"  formats used across the burst: {fmts}")
 
     st = eng.stats
+    contract = "fused Pallas dequant-GEMM" if st["fused"] \
+        else "XLA densify-inside-jit"
     print(f"\nengine stats: ticks={st['ticks']} tokens={st['tokens_out']} "
-          f"swaps={st['fmt_swaps']}")
+          f"swaps={st['fmt_swaps']} prefill_compiles={st['prefill_traces']} "
+          f"contract={contract}")
     for fmt in st["formats_cached"]:
         print(f"  {fmt:>7}: containers={st['containers'][fmt]} "
               f"weight_bytes={st['weight_bytes'][fmt]}")

@@ -105,6 +105,28 @@ def pack_int4_jnp(codes: jnp.ndarray) -> jnp.ndarray:
     return (lo | (hi << 4)).astype(jnp.uint8)
 
 
+def pack_int4_splitn_jnp(codes: jnp.ndarray) -> jnp.ndarray:
+    """int8 codes (..., N) -> uint8 (..., N/2), split-half layout.
+
+    Byte j carries code j in the low nibble and code j + N/2 in the high
+    nibble. This is the layout the fused int4 dequant-GEMM kernel reads when
+    the last axis is the GEMM's output (N) dimension: an output tile never
+    straddles the halves, so the nibble choice is a scalar per grid step.
+    """
+    if codes.shape[-1] % 2 != 0:
+        raise ValueError("last axis must be even for int4 packing")
+    half = codes.shape[-1] // 2
+    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    return (u[..., :half] | (u[..., half:] << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_splitn_jnp(packed: jnp.ndarray, dtype=jnp.int8) -> jnp.ndarray:
+    """Inverse of pack_int4_splitn_jnp: (..., N/2) uint8 -> (..., N) codes."""
+    lo = ((packed & 0xF).astype(jnp.int32) ^ 8) - 8
+    hi = (((packed >> 4) & 0xF).astype(jnp.int32) ^ 8) - 8
+    return jnp.concatenate([lo, hi], axis=-1).astype(dtype)
+
+
 def unpack_int4_jnp(packed: jnp.ndarray, dtype=jnp.int8) -> jnp.ndarray:
     """uint8 nibble-packed -> int8 codes (last axis doubled), sign-extended."""
     lo = (packed & 0xF).astype(jnp.int32)

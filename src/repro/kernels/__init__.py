@@ -7,6 +7,10 @@ Kernels (pl.pallas_call + explicit BlockSpec VMEM tiling):
   mx_matmul    — dequant-fused GEMM over packed MX weights (+ int4-packed)
 
 ``ops`` holds the jit'd public wrappers (interpret=True on CPU), ``ref`` the
-pure-jnp oracles every kernel is tested against.
+pure-jnp oracles every kernel is tested against, and ``dispatch`` the
+serving-path entry point: ``qmatmul(x, leaf)`` routes packed weight
+containers (MXTensor / split-N PackedInt4Leaf) into the fused dequant-GEMM
+with shape padding, tile selection, and an XLA densify fallback.
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import dispatch, ops, ref  # noqa: F401
+from repro.kernels.dispatch import qmatmul  # noqa: F401

@@ -1,0 +1,283 @@
+"""Quantized-matmul dispatch: packed MX weight leaves straight to the MXU.
+
+``qmatmul(x, leaf)`` is the serving hot loop's GEMM entry point. It accepts
+the packed containers the weight caches hold — ``MXTensor`` (int8/uint8
+element codes + E8M0 scales) and split-N ``PackedInt4Leaf`` (nibble pairs) —
+and routes them to the fused Pallas dequant-GEMM kernels in ``mx_matmul.py``
+without ever materializing a dense weight in HBM:
+
+  mode "pallas"   ``mx_matmul_pallas`` / ``mx_matmul_int4_pallas``; on TPU
+                  these lower to Mosaic, elsewhere they run interpret-mode
+                  (the test/CI correctness path).
+  mode "densify"  XLA fallback: dequantize the leaf at its point of use and
+                  issue a plain dot (XLA fuses the dequant into the GEMM).
+  mode "auto"     "pallas" on TPU, "densify" elsewhere.
+
+The wrapper owns everything the raw kernels refuse to deal with: arbitrary
+``(M, K, N)`` via zero padding to tile multiples (zero codes dequantize to
+exactly 0 in every MX format, so padding never perturbs the result), the
+int4 kernel's ``half_n % tn == 0`` constraint (both packed halves are padded
+and the two output column ranges re-spliced), and tile-size selection — a
+static table refined by autotuned entries registered per ``(shape, fmt)``
+from ``benchmarks/kernels_bench.py``.
+
+Fallback conditions (leaf not 2D after scan slicing, legacy split-K int4
+layout, non-even shapes) silently take the densify path; ``stats()`` counts
+which path each traced call took so benchmarks and CI can assert the fused
+kernels are actually live.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import MXFormat, get_format
+from repro.core.mx import MXTensor
+from repro.kernels import mx_matmul as _mm
+
+# ---------------------------------------------------------------------------
+# Mode resolution + trace-time accounting
+# ---------------------------------------------------------------------------
+MODES = ("auto", "pallas", "densify")
+
+_stats: Dict[str, int] = {"pallas": 0, "pallas_int4": 0, "densify": 0}
+
+
+def stats() -> Dict[str, int]:
+    """Trace-time counts of which execution path qmatmul dispatched to."""
+    return dict(_stats)
+
+
+def reset_stats() -> None:
+    for k in _stats:
+        _stats[k] = 0
+
+
+def default_mode() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "densify"
+
+
+def resolve_mode(mode: Optional[str]) -> str:
+    if mode is None or mode == "auto":
+        return default_mode()
+    if mode not in ("pallas", "densify"):
+        raise ValueError(f"unknown qmatmul mode {mode!r}; one of {MODES}")
+    return mode
+
+
+def _interpret() -> bool:
+    # Mosaic only lowers on TPU; everywhere else the kernel body runs in the
+    # Pallas interpreter (exactly as written — the CI correctness contract).
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Tile selection: static table + autotune-registered cache
+# ---------------------------------------------------------------------------
+# (m, k, n, fmt_name, kind) -> (tm, tn, tk); kind is "mx" or "int4"
+# (for "int4" the tn entry tiles half_n = n // 2, matching the kernel grid).
+_TILE_CACHE: Dict[Tuple[int, int, int, str, str], Tuple[int, int, int]] = {}
+
+# Hard ceilings keeping one (TM,TK)+(TK,TN) operand pair comfortably in VMEM.
+_TM_CAP, _TN_CAP, _TK_CAP = 128, 256, 512
+
+
+def register_tiles(m: int, k: int, n: int, fmt_name: str,
+                   tiles: Tuple[int, int, int], kind: str = "mx") -> None:
+    """Pin (tm, tn, tk) for an exact (M, K, N, fmt) — autotune results land
+    here (see ``benchmarks/kernels_bench.py::autotune_qmatmul``)."""
+    _TILE_CACHE[(m, k, n, fmt_name, kind)] = tuple(tiles)
+
+
+def tile_cache() -> Dict:
+    return dict(_TILE_CACHE)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _best_tile(dim: int, unit: int, cap: int) -> int:
+    """Largest multiple of ``unit`` <= cap that minimizes padded size."""
+    best, best_pad = unit, _round_up(max(dim, 1), unit)
+    t = unit
+    while t <= cap:
+        pad = _round_up(max(dim, 1), t)
+        if pad < best_pad or (pad == best_pad and t > best):
+            best, best_pad = t, pad
+        t += unit
+    return best
+
+
+def select_tiles(m: int, k: int, n: int, fmt: MXFormat,
+                 kind: str = "mx") -> Tuple[int, int, int]:
+    """(tm, tn, tk) for an (M, K, N) qmatmul at ``fmt``.
+
+    Autotuned entries win; otherwise tiles are picked to minimize zero
+    padding subject to VMEM-friendly caps — sublane multiples of 8 for M,
+    lane-dim multiples of 8 (128 when it divides) for N, block-size
+    multiples for K so scales tile alongside the weight.
+    """
+    key = (m, k, n, fmt.name, kind)
+    if key in _TILE_CACHE:
+        return _TILE_CACHE[key]
+    bs = fmt.block_size
+    n_eff = n // 2 if kind == "int4" else n
+    tm = _best_tile(m, 8, _TM_CAP)
+    tn = 128 if n_eff % 128 == 0 else _best_tile(n_eff, 8, _TN_CAP)
+    tk = _best_tile(k, bs, max(bs, (_TK_CAP // bs) * bs))
+    return tm, tn, tk
+
+
+# ---------------------------------------------------------------------------
+# Padded kernel wrappers
+# ---------------------------------------------------------------------------
+def _pad_to(a: jax.Array, axis: int, size: int) -> jax.Array:
+    pad = size - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def qmatmul_mx(x2: jax.Array, codes: jax.Array, scales_kn: jax.Array,
+               fmt: MXFormat, *, tiles: Optional[Tuple] = None) -> jax.Array:
+    """x2 (M, K) @ dequant(codes (K, N), scales (K/bs, N)) -> (M, N) f32.
+
+    Pads every dim to the selected tile multiples (zero codes contribute
+    exactly 0) and slices the result back — arbitrary shapes welcome.
+    """
+    m, k = x2.shape
+    n = codes.shape[1]
+    bs = fmt.block_size
+    tm, tn, tk = tiles or select_tiles(m, k, n, fmt, kind="mx")
+    mp, kp, np_ = _round_up(m, tm), _round_up(k, tk), _round_up(n, tn)
+    x2 = _pad_to(_pad_to(x2, 0, mp), 1, kp)
+    codes = _pad_to(_pad_to(codes, 0, kp), 1, np_)
+    scales = _pad_to(_pad_to(scales_kn, 0, kp // bs), 1, np_)
+    _stats["pallas"] += 1
+    out = _mm.mx_matmul_pallas(x2, codes, scales, fmt, tm=tm, tn=tn, tk=tk,
+                               interpret=_interpret())
+    return out[:m, :n]
+
+
+def qmatmul_int4(x2: jax.Array, packed: jax.Array, scales_kn: jax.Array,
+                 fmt: MXFormat, *, tiles: Optional[Tuple] = None) -> jax.Array:
+    """x2 (M, K) @ dequant(split-N int4 (K, N/2), scales (K/bs, N)) -> (M, N).
+
+    The raw kernel requires ``half_n % tn == 0``; here both nibble halves are
+    zero-padded to the tile multiple (scales split and re-packed to match the
+    padded column layout) and the two true output ranges re-spliced, so odd
+    tile-unfriendly N just works.
+    """
+    m, k = x2.shape
+    half_n = packed.shape[1]
+    n = half_n * 2
+    bs = fmt.block_size
+    tm, tn, tk = tiles or select_tiles(m, k, n, fmt, kind="int4")
+    mp, kp = _round_up(m, tm), _round_up(k, tk)
+    hp = _round_up(half_n, tn)
+    x2 = _pad_to(_pad_to(x2, 0, mp), 1, kp)
+    packed = _pad_to(_pad_to(packed, 0, kp), 1, hp)
+    scales = jnp.concatenate([_pad_to(scales_kn[:, :half_n], 1, hp),
+                              _pad_to(scales_kn[:, half_n:], 1, hp)], axis=1)
+    scales = _pad_to(scales, 0, kp // bs)
+    _stats["pallas_int4"] += 1
+    out = _mm.mx_matmul_int4_pallas(x2, packed, scales, fmt,
+                                    tm=tm, tn=tn, tk=tk,
+                                    interpret=_interpret())
+    return jnp.concatenate([out[:m, :half_n], out[:m, hp:hp + half_n]],
+                           axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Leaf-level dispatch
+# ---------------------------------------------------------------------------
+def _check_serving_layout(leaf) -> None:
+    """Reject 2D MXTensor leaves whose scales aren't in the serving layout.
+
+    The contract is codes (K, N) with scale_exp (N, K/bs) — what
+    ``quantize(w, fmt, axis=0)`` and scan-sliced serving trees produce. A
+    leaf quantized along the wrong axis has scale_exp (K, N/bs), which for
+    non-square weights is caught here LOUDLY (both the fused kernel and the
+    serving-axis densify fallback would silently misread it). Square K == N
+    is inherently shape-ambiguous; callers own the convention there.
+    """
+    if isinstance(leaf, MXTensor) and leaf.codes.ndim == 2:
+        k, n = leaf.codes.shape
+        bs = leaf.fmt.block_size
+        want = (n, k // bs)
+        if k % bs == 0 and tuple(leaf.scale_exp.shape) != want:
+            raise ValueError(
+                f"MXTensor leaf violates the serving layout: codes "
+                f"{(k, n)} expect scale_exp {want}, got "
+                f"{tuple(leaf.scale_exp.shape)} — was it quantized along "
+                "the wrong axis?")
+
+
+def _fused_supported(leaf) -> bool:
+    from repro.serve.packed_params import PackedInt4Leaf
+    if isinstance(leaf, MXTensor):
+        return leaf.codes.ndim == 2 and leaf.codes.shape[0] % \
+            leaf.fmt.block_size == 0
+    if isinstance(leaf, PackedInt4Leaf):
+        # legacy split-K nibble layout has no fused kernel — densify it
+        return leaf.layout == "splitn" and leaf.packed.ndim == 2
+    return False
+
+
+def qmatmul(x: jax.Array, leaf, *, mode: Optional[str] = None,
+            block_size: int = 32, tiles: Optional[Tuple] = None,
+            out_dtype=None) -> jax.Array:
+    """y = x @ dequant(leaf), never materializing the dense weight in HBM.
+
+    x (..., K); leaf is an MXTensor with codes (K, N) / scales (N, K/bs)
+    (the serving convention: contraction dim = ndim-2, scales in the
+    moved-last blocked layout) or a split-N PackedInt4Leaf with packed
+    (K, N/2). Block sizes are carried by the leaves themselves
+    (``block_size`` is kept for API stability only). Returns (..., N) in
+    ``out_dtype`` (default: x.dtype).
+    """
+    out_dtype = out_dtype or x.dtype
+    _check_serving_layout(leaf)
+    use_pallas = resolve_mode(mode) == "pallas" and _fused_supported(leaf)
+    if not use_pallas:
+        from repro.serve.packed_params import densify_leaf
+        _stats["densify"] += 1
+        w = densify_leaf(leaf, None, out_dtype, serving_axis=True)
+        return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                                   preferred_element_type=out_dtype)
+
+    from repro.serve.packed_params import PackedInt4Leaf, leaf_block_size
+    k = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if isinstance(leaf, MXTensor):
+        fmt = leaf.fmt
+        out = qmatmul_mx(x2, leaf.codes, leaf.scale_exp.T, fmt, tiles=tiles)
+    else:
+        assert isinstance(leaf, PackedInt4Leaf)
+        # block size from the leaf's own shapes, not the registry default
+        fmt = get_format(leaf.fmt_name, leaf_block_size(leaf))
+        out = qmatmul_int4(x2, leaf.packed, leaf.scale_exp.T, fmt,
+                           tiles=tiles)
+    return out.reshape(*lead, out.shape[-1]).astype(out_dtype)
+
+
+def make_qmm(block_size: int = 32, mode: Optional[str] = None) -> Callable:
+    """A ``QuantCtx.qmm`` hook: (x, leaf, name) -> y at a fixed mode.
+
+    The mode is resolved once, at construction — engines build one jitted
+    executable per hook, so the fused/densify choice is baked into the trace
+    (no stale-jit-cache hazards from flipping a global).
+    """
+    resolved = resolve_mode(mode)
+
+    def qmm(x, leaf, name=None):
+        del name
+        return qmatmul(x, leaf, mode=resolved, block_size=block_size)
+
+    return qmm

@@ -79,13 +79,14 @@ def mx_matmul_pallas(x: jax.Array, codes: jax.Array, scale_exp: jax.Array,
 # int4 split-N packed variant
 # =============================================================================
 def pack_int4_splitn(codes: jax.Array) -> jax.Array:
-    """int8 codes (K, N) -> uint8 packed (K, N/2), split-N layout."""
-    k, n = codes.shape
-    assert n % 2 == 0
-    half = n // 2
-    lo = (codes[:, :half].astype(jnp.int32) & 0xF).astype(jnp.uint8)
-    hi = (codes[:, half:].astype(jnp.int32) & 0xF).astype(jnp.uint8)
-    return (lo | (hi << 4)).astype(jnp.uint8)
+    """int8 codes (K, N) -> uint8 packed (K, N/2), split-N layout.
+
+    Thin 2D shim over the one true implementation in ``core.packed`` (the
+    serving trees pack through it too — one byte layout, one source).
+    """
+    from repro.core.packed import pack_int4_splitn_jnp
+    assert codes.ndim == 2 and codes.shape[1] % 2 == 0
+    return pack_int4_splitn_jnp(codes)
 
 
 def _mm4_kernel(x_ref, packed_ref, scales_ref, out_ref, *,

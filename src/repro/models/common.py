@@ -103,33 +103,32 @@ class ModelConfig:
         return self.mamba_dt_rank or max(1, -(-self.d_model // 16))
 
 
+def is_packed_leaf(w) -> bool:
+    """True for the packed-MX weight containers the serving trees hold."""
+    from repro.core.mx import MXTensor
+    if isinstance(w, MXTensor):
+        return True
+    try:
+        from repro.serve.packed_params import PackedInt4Leaf
+        return isinstance(w, PackedInt4Leaf)
+    except ImportError:
+        return False
+
+
 def _maybe_dequant_packed(w, dtype):
     """Dequantize packed-MX weight containers at their point of use.
 
     Containers sliced out of a scan keep stale static `block_axis` metadata;
-    the contraction dim is always ndim-2 by our stacking convention, so it is
-    re-derived here.
+    ``serving_axis=True`` re-derives the contraction dim as ndim-2 per our
+    stacking convention (one shared implementation in serve/packed_params).
     """
-    from repro.core.mx import MXTensor, dequantize
-    if isinstance(w, MXTensor):
-        t = MXTensor(codes=w.codes, scale_exp=w.scale_exp, fmt=w.fmt,
-                     block_axis=max(w.codes.ndim - 2, 0))
-        return dequantize(t, dtype=dtype)
-    try:
-        from repro.serve.packed_params import PackedInt4Leaf, unpack_leaf_int4
-        if isinstance(w, PackedInt4Leaf):
-            from repro.core.packed import unpack_int4_jnp
-            codes = unpack_int4_jnp(w.packed)
-            codes = jnp.moveaxis(codes, -1, max(codes.ndim - 2, 0))
-            t_fmt_axis = max(codes.ndim - 2, 0)
-            from repro.core.formats import get_format
-            from repro.core.mx import MXTensor as _MXT, dequantize as _dq
-            t = _MXT(codes=codes, scale_exp=w.scale_exp,
-                     fmt=get_format(w.fmt_name), block_axis=t_fmt_axis)
-            return _dq(t, dtype=dtype)
-    except ImportError:
-        pass
-    return w
+    if not is_packed_leaf(w):
+        return w
+    from repro.serve.packed_params import densify_leaf
+    # block_size=None: derived from the leaf itself (MXTensor carries its
+    # fmt; PackedInt4Leaf's is computed from its shapes — the registry
+    # default would be wrong for non-default anchor block sizes).
+    return densify_leaf(w, None, dtype, serving_axis=True)
 
 
 @dataclasses.dataclass
@@ -138,30 +137,51 @@ class QuantCtx:
 
     fmt_idx semantics (see fake_quant_switch): 0..len(formats)-1 selects a
     training format, len(formats) selects the FP pass-through branch.
+
+    ``qmm`` is the serving-path matmul hook: ``(x, packed_leaf, name) -> y``.
+    When set, packed-MX weight containers skip the XLA dequant below and are
+    fed straight to the fused Pallas dequant-GEMM dispatch
+    (``repro.kernels.dispatch.qmatmul``) — the weight never exists dense.
     """
 
     qat: Optional[QATConfig] = None
     fmt_idx: Optional[jax.Array] = None
+    qmm: Optional[Any] = None
 
     def maybe_quant(self, w: jax.Array, name: str) -> jax.Array:
         if self.qat is None or not self.qat.enabled or self.fmt_idx is None:
             return w
         return self.qat.apply(w, name, self.fmt_idx)
 
+    def no_qmm(self) -> "QuantCtx":
+        """A copy without the fused-GEMM hook (densify-at-point-of-use).
+
+        Used under transformations the dispatch layer doesn't support yet —
+        e.g. the vmapped MoE expert GEMMs, where leaves arrive as batch
+        tracers and pallas_call would need a batching rule.
+        """
+        if self.qmm is None:
+            return self
+        return dataclasses.replace(self, qmm=None)
+
     def dense(self, x: jax.Array, w, name: str,
               b: Optional[jax.Array] = None,
               out_logical: Optional[Tuple] = None) -> jax.Array:
         """y = x @ fake_quant(w) in the compute dtype.
 
-        `w` may be a packed-MX container (MXTensor / PackedInt4Leaf): then it
-        is dequantized right here — inside the layer scan — so only one
-        layer's bf16 weights are ever resident (the XLA-level analogue of
-        the Pallas dequant-fused GEMM contract; see serve/packed_params.py).
+        `w` may be a packed-MX container (MXTensor / PackedInt4Leaf): with a
+        ``qmm`` hook it flows into the fused dequant-GEMM; otherwise it is
+        dequantized right here — inside the layer scan — so only one layer's
+        bf16 weights are ever resident (the XLA-level analogue of the Pallas
+        contract; see serve/packed_params.py).
         """
-        w = _maybe_dequant_packed(w, x.dtype)
-        wq = self.maybe_quant(w, name).astype(x.dtype)
-        y = jax.lax.dot_general(x, wq, (((x.ndim - 1,), (0,)), ((), ())),
-                                preferred_element_type=x.dtype)
+        if self.qmm is not None and is_packed_leaf(w):
+            y = self.qmm(x, w, name)
+        else:
+            w = _maybe_dequant_packed(w, x.dtype)
+            wq = self.maybe_quant(w, name).astype(x.dtype)
+            y = jax.lax.dot_general(x, wq, (((x.ndim - 1,), (0,)), ((), ())),
+                                    preferred_element_type=x.dtype)
         if b is not None:
             y = y + b.astype(x.dtype)
         if out_logical is not None:

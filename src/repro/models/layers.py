@@ -289,11 +289,15 @@ def moe_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig, name: str):
     xe = xe.transpose(1, 0, 2, 3)                                # (E, B, C, d)
     xe = shard_act(xe, ("experts", "batch", None, None))
 
+    # Expert GEMMs run under vmap, where packed leaves arrive as batch
+    # tracers the Pallas dispatch can't take yet — densify at point of use.
+    ctx_e = ctx.no_qmm()
+
     def expert_ffn(pe, xi):                                      # xi (B, C, d)
-        gate = ctx.dense(xi, pe["w_gate"], name + ".expert.w_gate")
-        up = ctx.dense(xi, pe["w_up"], name + ".expert.w_up")
-        return ctx.dense(jax.nn.silu(gate) * up, pe["w_down"],
-                         name + ".expert.w_down")
+        gate = ctx_e.dense(xi, pe["w_gate"], name + ".expert.w_gate")
+        up = ctx_e.dense(xi, pe["w_up"], name + ".expert.w_up")
+        return ctx_e.dense(jax.nn.silu(gate) * up, pe["w_down"],
+                           name + ".expert.w_down")
 
     ye = jax.vmap(expert_ffn)(p["experts"], xe)                  # (E, B, C, d)
     ye = ye * top_gate.transpose(1, 0, 2)[..., None].astype(ye.dtype)

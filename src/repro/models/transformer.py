@@ -343,6 +343,30 @@ def _lm_head_w(params, cfg: ModelConfig):
     return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
 
 
+def _head_logits(ctx: QuantCtx, params, cfg: ModelConfig, h_last):
+    """lm-head projection over the last-position hidden states (B, d).
+
+    In fused serving the params tree stays packed: a quantized lm_head leaf
+    (non-default QAT exclusions) routes through the dequant-GEMM hook like
+    every other projection instead of crashing on `.astype`.
+    """
+    from repro.models.common import is_packed_leaf
+    if not cfg.tie_embeddings and ctx.qmm is not None and \
+            is_packed_leaf(params["lm_head"]):
+        return ctx.qmm(h_last.astype(jnp.float32), params["lm_head"],
+                       "lm_head")
+    return jax.lax.dot_general(
+        h_last.astype(jnp.float32),
+        _lm_head_w(params, cfg).astype(jnp.float32),
+        (((1,), (0,)), ((), ())))
+
+
+def _last_hidden(hidden, cache_len):
+    """hidden (B, S, d) -> (B, d) at each row's own last valid position."""
+    return jax.vmap(lambda h, i: jax.lax.dynamic_index_in_dim(
+        h, i, 0, keepdims=False))(hidden, cache_len - 1)
+
+
 def chunked_ce_loss(ctx: QuantCtx, hidden, head_w, labels, mask,
                     cfg: ModelConfig):
     """Cross entropy over vocab-sharded logits, chunked along seq."""
@@ -390,6 +414,9 @@ class ModelApi:
     #                                -> (logits (V,), cache, len scalar);
     #                                single-request prefill-insert: fills one
     #                                slot without touching the others
+    with_qmm: Callable = None      # (qmm) -> ModelApi whose serving entry
+    #                                points route packed weight leaves
+    #                                through the fused dequant-GEMM hook
 
 
 def _cache_for_block(cfg: ModelConfig, j: int, b: int, s_max: int, dtype):
@@ -469,50 +496,77 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         return {"blocks": [_cache_axes_for_block(cfg, j)
                            for j in range(cfg.scan_group)]}
 
-    def prefill(params, batch, cache):
-        """Process the full prompt, fill the cache, return last-pos logits.
+    def _serving_fns(qmm=None):
+        """Build (prefill, serve_step) sharing one matmul hook.
 
-        Serving never fake-quantizes: weights arrive already PTQ'd /
-        SS-converted (running the QAT switch here would upcast weights to
-        f32 and double the FSDP all-gather bytes — found via dry-run HLO).
+        ``qmm=None`` is the XLA contract (packed leaves dequantized at point
+        of use / pre-densified trees); a hook routes every packed projection
+        through the fused Pallas dequant-GEMM dispatch.
         """
-        ctx = QuantCtx()
-        tokens = batch["tokens"]
-        b, s = tokens.shape
-        x = _embed(params, cfg, tokens)
-        if cfg.vision_tokens > 0:
-            ve = batch["vision_embeds"].astype(cfg.compute_dtype)
-            x = jnp.concatenate([ve, x], axis=1)
-        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
-                                     (b, x.shape[1]))
-        hidden, new_cache, _ = forward_hidden(
-            ctx, params, cfg, x, positions, cache=cache,
-            cache_len=jnp.zeros((b,), jnp.int32), prefill=True)
-        logits = jax.lax.dot_general(
-            hidden[:, -1].astype(jnp.float32),
-            _lm_head_w(params, cfg).astype(jnp.float32),
-            (((1,), (0,)), ((), ())))
-        cache_len = jnp.full((b,), x.shape[1], jnp.int32)
-        return logits, new_cache, cache_len
 
-    def serve_step(params, batch, cache, cache_len):
-        """One decode step: batch['tokens'] (B,1) against the cache."""
-        ctx = QuantCtx()   # no fake-quant in serving (see prefill)
-        tokens = batch["tokens"]
-        b = tokens.shape[0]
-        x = _embed(params, cfg, tokens)
-        positions = cache_len[:, None]
-        hidden, new_cache, _ = forward_hidden(
-            ctx, params, cfg, x, positions, cache=cache,
-            cache_len=cache_len, prefill=False)
-        logits = jax.lax.dot_general(
-            hidden[:, -1].astype(jnp.float32),
-            _lm_head_w(params, cfg).astype(jnp.float32),
-            (((1,), (0,)), ((), ())))
-        logits = shard_act(logits, ("batch", "vocab"))
-        return logits, new_cache
+        def prefill(params, batch, cache):
+            """Process the full prompt, fill the cache, return last-pos
+            logits.
 
-    return ModelApi(
+            Serving never fake-quantizes: weights arrive already PTQ'd /
+            SS-converted (running the QAT switch here would upcast weights to
+            f32 and double the FSDP all-gather bytes — found via dry-run
+            HLO).
+
+            ``batch["lengths"]`` (B,), optional: true prompt lengths when
+            tokens are right-padded to a length bucket. Attention is causal,
+            so pad positions never influence real ones; logits are read at
+            each row's own last real token and cache_len is the true length,
+            which exactly masks the pad KV entries at decode.
+            """
+            ctx = QuantCtx(qmm=qmm)
+            tokens = batch["tokens"]
+            b, s = tokens.shape
+            x = _embed(params, cfg, tokens)
+            extra = 0
+            if cfg.vision_tokens > 0:
+                ve = batch["vision_embeds"].astype(cfg.compute_dtype)
+                x = jnp.concatenate([ve, x], axis=1)
+                extra = ve.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                         (b, x.shape[1]))
+            hidden, new_cache, _ = forward_hidden(
+                ctx, params, cfg, x, positions, cache=cache,
+                cache_len=jnp.zeros((b,), jnp.int32), prefill=True)
+            lengths = batch.get("lengths")
+            if lengths is None:
+                cache_len = jnp.full((b,), x.shape[1], jnp.int32)
+                h_last = hidden[:, -1]
+            else:
+                cache_len = lengths.astype(jnp.int32) + extra
+                h_last = _last_hidden(hidden, cache_len)
+            logits = _head_logits(ctx, params, cfg, h_last)
+            return logits, new_cache, cache_len
+
+        def serve_step(params, batch, cache, cache_len):
+            """One decode step: batch['tokens'] (B,1) against the cache."""
+            ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
+            tokens = batch["tokens"]
+            b = tokens.shape[0]
+            x = _embed(params, cfg, tokens)
+            positions = cache_len[:, None]
+            hidden, new_cache, _ = forward_hidden(
+                ctx, params, cfg, x, positions, cache=cache,
+                cache_len=cache_len, prefill=False)
+            logits = _head_logits(ctx, params, cfg, hidden[:, -1])
+            logits = shard_act(logits, ("batch", "vocab"))
+            return logits, new_cache
+
+        return prefill, serve_step
+
+    prefill, serve_step = _serving_fns(None)
+
+    def with_qmm(qmm):
+        p, s = _serving_fns(qmm)
+        return dataclasses.replace(api, prefill=p, serve_step=s,
+                                   prefill_slot=make_prefill_slot(p))
+
+    api = ModelApi(
         cfg=cfg, qat=qat,
         init_params=functools.partial(init_params, cfg=cfg),
         param_axes=functools.partial(param_axes, cfg=cfg),
@@ -522,4 +576,6 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         prefill=prefill,
         serve_step=serve_step,
         prefill_slot=make_prefill_slot(prefill),
+        with_qmm=with_qmm,
     )
+    return api

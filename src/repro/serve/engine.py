@@ -3,25 +3,43 @@
 Implements the paper's §3.5 inference scheme end-to-end: one anchor
 checkpoint (MXINT8/MXFP8) is resident; per-format weight caches hold
 **packed** pytrees built by ``make_packed_params`` — MXTensor leaves (int8
-codes + E8M0 scales) for >=5-bit formats, nibble-packed ``PackedInt4Leaf``
-for MXINT4. The decode tick runs ``make_packed_serve_step``, which densifies
-*inside* the jitted step: XLA's HBM weight traffic is the packed bytes and
-the dequant fuses into the consuming matmuls, so decode — HBM-bound on
-weight reads — streams 2x/4x fewer bytes at mxint8/mxint4 than dense bf16
-(the Pallas ``mx_matmul`` kernels implement the same contract explicitly on
-TPU). Deriving a new format costs one packed-domain Slice-and-Scale pass and
-is cached; switching between cached formats is free.
+codes + E8M0 scales) for >=5-bit formats, split-N nibble-packed
+``PackedInt4Leaf`` for MXINT4. The decode tick serves straight from the
+packed bytes under one of two contracts:
+
+  fused (default on TPU)  — ``make_packed_serve_step(fused=True)``: every
+      projection feeds its packed leaf to the Pallas dequant-GEMM via
+      ``kernels.dispatch.qmatmul``; weight HBM traffic is exactly the codes
+      + scales, streamed tile-by-tile into VMEM (interpret-mode off TPU —
+      the test path).
+  densify-inside-jit      — the XLA fallback: leaves dequantize inside the
+      jitted step and XLA fuses the dequant into the consuming matmuls.
+
+Both contracts read the same codes, so decode — HBM-bound on weight reads —
+streams 2x/4x fewer bytes at mxint8/mxint4 than dense bf16, and greedy
+token streams are identical across them. Deriving a new format costs one
+packed-domain Slice-and-Scale pass and is cached; switching between cached
+formats is free.
 
 Slot lifecycle (continuous batching):
 
   admit   — each request is prefilled individually via
             ``ModelApi.prefill_slot`` into a free slot; active slots are
-            never re-prefilled.
+            never re-prefilled. Prompts are right-padded to power-of-two
+            length buckets (exact masking via ``batch["lengths"]``), so the
+            prefill executable compiles once per bucket, not once per
+            prompt length.
   decode  — one fused serve_step advances every slot per tick; free/finished
             slots are masked (their cache_len stops advancing and their
             sampled tokens are dropped).
   retire  — a slot frees the moment its request reaches ``max_new`` or cache
             capacity, and is re-admissible on the very next tick.
+
+Sampling: greedy argmax, or temperature/top-p with **per-slot RNG streams**
+— each admission seeds its slot from ``fold_in(engine_key, rid)`` and every
+draw advances only that slot's key, so concurrent identical prompts decode
+independently and any request's stream is reproducible from (seed, rid)
+alone.
 
 Format selection is **batch-pinned**: the policy picks once, when the engine
 transitions from drained to busy, and every request admitted while any slot
@@ -55,6 +73,35 @@ from repro.serve.policy import FormatPolicy
 
 DENSE_BF16 = "bf16"   # pseudo-format: dense anchor-precision weights
 
+MIN_PREFILL_BUCKET = 8
+
+
+def _bucket_len(plen: int, cap: int) -> int:
+    """Smallest power-of-two bucket >= plen (floor MIN_PREFILL_BUCKET),
+    clamped to the cache capacity ``cap``."""
+    b = MIN_PREFILL_BUCKET
+    while b < plen:
+        b *= 2
+    return min(b, cap)
+
+
+def _sample_one(key, logits, temperature, top_p):
+    """One temperature/top-p draw; returns (advanced_key, token)."""
+    k_next, k_draw = jax.random.split(key)
+    lg = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    probs = jax.nn.softmax(lg)
+    order = jnp.argsort(-probs)
+    sp = jnp.take(probs, order)
+    # nucleus: smallest prefix of descending probs reaching top_p mass
+    # (top-1 always kept: its prefix-exclusive cumsum is 0 < top_p)
+    keep_sorted = (jnp.cumsum(sp) - sp) < top_p
+    keep = jnp.zeros_like(keep_sorted).at[order].set(keep_sorted)
+    return k_next, jax.random.categorical(k_draw, jnp.where(keep, lg,
+                                                            -jnp.inf))
+
+
+_sample_batch = jax.jit(jax.vmap(_sample_one, in_axes=(0, 0, None, None)))
+
 
 @dataclasses.dataclass
 class Request:
@@ -73,18 +120,38 @@ class ElasticEngine:
     equivalent (same codes, dequantized ahead of time) — the reference path
     for packed-vs-dense equivalence tests and roofline baselines. The
     pseudo-format ``"bf16"`` serves dense anchor-precision weights.
+
+    ``fused`` selects the packed-serving contract: the Pallas dequant-GEMM
+    dispatch (True) vs XLA densify-inside-jit (False); None = fused on TPU.
+    Fixed per engine instance, so each contract gets its own jitted
+    executables and no stale-cache hazards exist.
     """
 
     def __init__(self, api: ModelApi, anchor: AnchorModel, *,
                  batch_slots: int = 4, max_len: int = 256,
                  policy: Optional[FormatPolicy] = None,
-                 param_template=None, packed: bool = True):
+                 param_template=None, packed: bool = True,
+                 fused: Optional[bool] = None, seed: int = 0,
+                 temperature: float = 1.0, top_p: float = 1.0,
+                 bucket_prompts: bool = True):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
         self.max_len = max_len
         self.policy = policy or FormatPolicy(anchor.fmt_name)
         self.packed = packed
+        if fused is None:             # auto: fused where Mosaic lowers and
+            #                           the family has the qmm hook
+            self.fused = jax.default_backend() == "tpu" \
+                and api.with_qmm is not None
+        else:
+            if fused and api.with_qmm is None:
+                raise ValueError(
+                    f"fused=True but model family {api.cfg.family!r} has no "
+                    "qmm hook; use fused=False (densify-inside-jit)")
+            self.fused = fused
+        self.temperature = temperature
+        self.top_p = top_p
         self._template = param_template if param_template is not None else \
             jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
         self._block_size = anchor_block_size(anchor)
@@ -93,14 +160,31 @@ class ElasticEngine:
         self._ticks = 0
         self._tokens_out = 0
         self.current_fmt: Optional[str] = None
+        # Length bucketing needs exact masking of right-padded prompts; the
+        # recurrent mixers (mamba/rwkv) fold pad tokens into their state, so
+        # only pure-attention stacks bucket.
+        self._bucket = bucket_prompts and api.cfg.family != "ssm" \
+            and api.cfg.attn_every <= 0 and api.cfg.family != "encdec"
+        # Per-slot RNG: reseeded from (engine key, rid) at admission.
+        self._key = jax.random.PRNGKey(seed)
+        self._slot_keys = jax.random.split(self._key, self.slots)
+        self._prefill_traces = 0     # host-side compile counter (bucketing)
         # Jitted entry points. Dense and packed trees have different pytree
         # structures, so jit caches one executable per cached format.
         self._dense_step = jax.jit(api.serve_step)
-        self._dense_prefill_slot = jax.jit(api.prefill_slot)
+        self._dense_prefill_slot = jax.jit(self._counting(api.prefill_slot))
         self._packed_step = jax.jit(
-            make_packed_serve_step(api, self._block_size))
-        self._packed_prefill_slot = jax.jit(
-            make_packed_prefill_slot(api, self._block_size))
+            make_packed_serve_step(api, self._block_size, fused=self.fused))
+        self._packed_prefill_slot = jax.jit(self._counting(
+            make_packed_prefill_slot(api, self._block_size,
+                                     fused=self.fused)))
+
+    def _counting(self, fn):
+        """Wrap a to-be-jitted fn so traces (= compiles) are counted."""
+        def wrapped(*args):
+            self._prefill_traces += 1    # runs at trace time only
+            return fn(*args)
+        return wrapped
 
     # ---- weights ----------------------------------------------------------
     def _serves_packed(self, fmt_name: str) -> bool:
@@ -137,6 +221,18 @@ class ElasticEngine:
         self.current_fmt = fmt_name
         return self.weights_for(fmt_name)
 
+    # ---- admission helpers ------------------------------------------------
+    def _prefill_batch(self, prompt: np.ndarray):
+        """Tokens (+ true length when bucketing) for one admission."""
+        plen = prompt.size
+        if not self._bucket:
+            return {"tokens": jnp.asarray(prompt[None])}
+        blen = _bucket_len(plen, self.max_len - 1)
+        padded = np.zeros(blen, np.int32)
+        padded[:plen] = prompt
+        return {"tokens": jnp.asarray(padded[None]),
+                "lengths": jnp.asarray([plen], jnp.int32)}
+
     # ---- serving loop -----------------------------------------------------
     def generate(self, requests: List[Request], greedy: bool = True,
                  fmt_override: Optional[str] = None) -> List[Request]:
@@ -169,11 +265,13 @@ class ElasticEngine:
                 prompt = np.asarray(r.prompt, np.int32)
                 assert prompt.size < self.max_len - 1, \
                     f"prompt ({prompt.size}) exceeds cache ({self.max_len})"
+                self._slot_keys = self._slot_keys.at[i].set(
+                    jax.random.fold_in(self._key, r.rid))
                 logits, cache, new_len = prefill_slot(
-                    params, {"tokens": jnp.asarray(prompt[None])}, cache, i)
+                    params, self._prefill_batch(prompt), cache, i)
                 cache_len = cache_len.at[i].set(new_len)
                 slot_len[i] = prompt.size
-                first = int(self._sample(logits[None], greedy)[0])
+                first = int(self._sample(logits[None], greedy, slot=i)[0])
                 tokens = tokens.at[i, 0].set(first)
                 r.fmt_used = pinned        # pinned for the whole sequence
                 r.out_tokens.append(first)
@@ -211,10 +309,25 @@ class ElasticEngine:
                 pinned = None
         return requests
 
-    def _sample(self, logits, greedy: bool):
-        if greedy:
+    def _sample(self, logits, greedy: bool, slot: Optional[int] = None):
+        """Greedy argmax, or a temperature/top-p draw from per-slot streams.
+
+        ``slot=None`` advances every slot's key by one draw (the decode
+        tick); a slot index draws for that slot only (admission). Free
+        slots' draws are discarded by the caller; advancing their keys is
+        harmless and keeps the tick one fused vmap.
+        """
+        if greedy or self.temperature <= 0:
             return jnp.argmax(logits, -1)
-        return jax.random.categorical(jax.random.PRNGKey(self._ticks), logits)
+        if slot is None:
+            self._slot_keys, toks = _sample_batch(
+                self._slot_keys, logits, self.temperature, self.top_p)
+            return toks
+        new_key, toks = _sample_batch(
+            self._slot_keys[slot][None], logits, self.temperature,
+            self.top_p)
+        self._slot_keys = self._slot_keys.at[slot].set(new_key[0])
+        return toks
 
     # ---- introspection ----------------------------------------------------
     @property
@@ -237,4 +350,6 @@ class ElasticEngine:
             "ticks": self._ticks,
             "tokens_out": self._tokens_out,
             "current": self.current_fmt,
+            "fused": self.fused,
+            "prefill_traces": self._prefill_traces,
         }

@@ -1,18 +1,31 @@
-"""Packed-MX serving parameters: dequantize-on-load inside the jitted step.
+"""Packed-MX serving parameters: packed leaves all the way to the GEMM.
 
 The elastic-inference performance claim: decode is HBM-bound on weight reads,
 so serving from MX codes (int8, or nibble-packed int4) cuts the memory
 roofline term by 2x/4x vs bf16 dense weights. These containers keep the
-*packed* representation as the on-device params pytree; `as_dense` runs
-inside the jitted serve step, so XLA's HBM traffic is the packed bytes and
-the dequant fuses into the consuming matmuls (on TPU the Pallas
-``mx_matmul`` kernel implements the same contract explicitly).
+*packed* representation as the on-device params pytree, and two serving
+contracts realize the claim:
+
+  fused (default on TPU)  — ``make_packed_serve_step(api, fused=True)``
+    passes the packed tree straight into the model; every projection routes
+    its leaf through ``repro.kernels.dispatch.qmatmul``, the fused Pallas
+    dequant-GEMM (interpret-mode off TPU), so the only weight HBM traffic is
+    the packed codes + scales streamed tile-by-tile into VMEM.
+
+  densify-inside-jit      — the XLA fallback: leaves are dequantized inside
+    the jitted step and XLA fuses the dequant into the consuming matmuls.
+    Numerically identical (same codes); the reference for parity tests.
+
+MXINT4 leaves use the split-N nibble layout (``PackedInt4Leaf`` with
+``layout="splitn"``): byte column j holds output column j in the low nibble
+and column j + N/2 in the high nibble, which is exactly what
+``mx_matmul_int4_pallas`` streams.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,40 +33,105 @@ import jax.numpy as jnp
 from repro.core.anchor import AnchorModel
 from repro.core.formats import get_format
 from repro.core.mx import MXTensor, decode_elements, dequantize
-from repro.core.packed import pack_int4_jnp, unpack_int4_jnp
+from repro.core.packed import (pack_int4_jnp, pack_int4_splitn_jnp,
+                               unpack_int4_jnp, unpack_int4_splitn_jnp)
 from repro.core.qat import QATConfig
 
 
 @functools.partial(jax.tree_util.register_dataclass,
                    data_fields=("packed", "scale_exp"),
-                   meta_fields=("shape", "block_axis", "fmt_name"))
+                   meta_fields=("shape", "block_axis", "fmt_name", "layout"))
 @dataclasses.dataclass
 class PackedInt4Leaf:
-    packed: jax.Array            # uint8, block axis moved last, len/2
+    packed: jax.Array            # uint8 nibble pairs, codes.size / 2
     scale_exp: jax.Array
-    shape: tuple
+    shape: tuple                 # original codes shape
     block_axis: int
     fmt_name: str
+    # "splitn": codes shape with the last (output) axis halved; byte col j =
+    #   output cols (j, j + N/2) — the fused int4 GEMM kernel's layout.
+    # "splitk": legacy — block axis moved last, adjacent nibble pairs along
+    #   it; densify-only (no fused kernel reads it).
+    layout: str = "splitn"
 
 
-def pack_leaf_int4(t: MXTensor) -> PackedInt4Leaf:
+def pack_leaf_int4(t: MXTensor, layout: str = "splitn") -> PackedInt4Leaf:
     assert t.fmt.kind == "int" and t.fmt.bits == 4
-    moved = jnp.moveaxis(t.codes, t.block_axis, -1)
-    return PackedInt4Leaf(packed=pack_int4_jnp(moved),
+    # split-N needs the last axis to be the GEMM output dim (block axis is
+    # the contraction) and even; otherwise fall back to the split-K layout.
+    if layout == "splitn" and (
+            t.block_axis % t.codes.ndim == t.codes.ndim - 1
+            or t.codes.shape[-1] % 2 != 0):
+        layout = "splitk"
+    if layout == "splitn":
+        packed = pack_int4_splitn_jnp(t.codes)
+    else:
+        packed = pack_int4_jnp(jnp.moveaxis(t.codes, t.block_axis, -1))
+    return PackedInt4Leaf(packed=packed,
                           scale_exp=t.scale_exp,
                           shape=tuple(t.codes.shape),
                           block_axis=t.block_axis,
-                          fmt_name=t.fmt.name)
+                          fmt_name=t.fmt.name,
+                          layout=layout)
+
+
+def leaf_block_size(p: PackedInt4Leaf) -> int:
+    """The block size the leaf was actually packed at, from its shapes.
+
+    K sits at ndim-2 for split-N (last dim is N/2) and, nibble-paired, at
+    the last dim for split-K; scale_exp's last dim is K/bs either way. Never
+    trust the format registry default here — anchors quantize at arbitrary
+    block sizes.
+    """
+    k = p.packed.shape[-2] if p.layout == "splitn" \
+        else p.packed.shape[-1] * 2
+    return k // p.scale_exp.shape[-1]
+
+
+def leaf_as_mx(p: PackedInt4Leaf, block_size: Optional[int] = None,
+               block_axis: Optional[int] = None) -> MXTensor:
+    """Unpack a PackedInt4Leaf back to an MXTensor view (int8 codes).
+
+    ``block_axis`` overrides the stored metadata — leaves sliced out of a
+    scan keep stale static axes; the serving convention is ndim-2.
+    ``block_size=None`` derives it from the leaf's own shapes.
+    """
+    ax = p.block_axis if block_axis is None else block_axis
+    bs = leaf_block_size(p) if block_size is None else block_size
+    if p.layout == "splitn":
+        codes = unpack_int4_splitn_jnp(p.packed)
+    else:
+        codes = jnp.moveaxis(unpack_int4_jnp(p.packed), -1, ax)
+    return MXTensor(codes=codes, scale_exp=p.scale_exp,
+                    fmt=get_format(p.fmt_name, bs), block_axis=ax)
 
 
 def unpack_leaf_int4(p: PackedInt4Leaf, block_size: int,
                      dtype=jnp.bfloat16) -> jax.Array:
-    codes = unpack_int4_jnp(p.packed)
-    codes = jnp.moveaxis(codes, -1, p.block_axis)
-    t = MXTensor(codes=codes, scale_exp=p.scale_exp,
-                 fmt=get_format(p.fmt_name, block_size),
-                 block_axis=p.block_axis)
-    return dequantize(t, dtype=dtype)
+    return dequantize(leaf_as_mx(p, block_size), dtype=dtype)
+
+
+def densify_leaf(leaf, block_size: Optional[int], dtype,
+                 serving_axis: bool = False) -> jax.Array:
+    """One packed container -> dense weight; non-containers pass through.
+
+    ``serving_axis=True`` re-derives the contraction axis as ndim-2 (the
+    serving convention — leaves sliced out of a scan keep stale static
+    ``block_axis``/``shape`` metadata). ``block_size=None`` derives the int4
+    block size from the leaf's own shapes. This is THE densify
+    implementation; both the qmatmul fallback and ``QuantCtx.dense`` route
+    here so the convention can't diverge between them.
+    """
+    if isinstance(leaf, MXTensor):
+        ax = max(leaf.codes.ndim - 2, 0) if serving_axis else leaf.block_axis
+        t = MXTensor(codes=leaf.codes, scale_exp=leaf.scale_exp,
+                     fmt=leaf.fmt, block_axis=ax)
+        return dequantize(t, dtype=dtype)
+    if isinstance(leaf, PackedInt4Leaf):
+        ax = max(leaf.packed.ndim - 2, 0) if serving_axis else None
+        return dequantize(leaf_as_mx(leaf, block_size, block_axis=ax),
+                          dtype=dtype)
+    return leaf
 
 
 def anchor_block_size(anchor: AnchorModel) -> int:
@@ -101,14 +179,9 @@ def make_packed_params(anchor: AnchorModel, template, *,
 def densify_params(packed_params, block_size: int = 32,
                    dtype=jnp.bfloat16):
     """Inside-jit: packed leaves -> dense weights (fuses into consumers)."""
-    def one(leaf):
-        if isinstance(leaf, MXTensor):
-            return dequantize(leaf, dtype=dtype)
-        if isinstance(leaf, PackedInt4Leaf):
-            return unpack_leaf_int4(leaf, block_size, dtype)
-        return leaf
     return jax.tree_util.tree_map(
-        one, packed_params,
+        lambda leaf: densify_leaf(leaf, block_size, dtype),
+        packed_params,
         is_leaf=lambda x: isinstance(x, (MXTensor, PackedInt4Leaf)))
 
 
@@ -143,15 +216,18 @@ def packed_param_shardings(packed_abstract, axes_tree, mesh, rules=None):
                 fmt=leaf.fmt, block_axis=leaf.block_axis)
         if isinstance(leaf, PackedInt4Leaf):
             ax = leaf.block_axis
-            moved = tuple(a for i, a in enumerate(leaf.shape) if i != ax)
             moved_axes = tuple(a for i, a in enumerate(axes) if i != ax) + \
                 (axes[ax],)
+            # split-N keeps the dense axis order (last dim halved);
+            # split-K moves the block axis last (nibble-paired).
+            packed_axes = axes if leaf.layout == "splitn" else moved_axes
             return PackedInt4Leaf(
                 packed=NamedSharding(mesh, spec_for_axes(
-                    leaf.packed.shape, moved_axes, mesh, rules)),
+                    leaf.packed.shape, packed_axes, mesh, rules)),
                 scale_exp=NamedSharding(mesh, spec_for_axes(
                     leaf.scale_exp.shape, moved_axes, mesh, rules)),
-                shape=leaf.shape, block_axis=ax, fmt_name=leaf.fmt_name)
+                shape=leaf.shape, block_axis=ax, fmt_name=leaf.fmt_name,
+                layout=leaf.layout)
         return NamedSharding(mesh, spec_for_axes(leaf.shape, axes, mesh,
                                                  rules))
 
@@ -168,7 +244,8 @@ def make_packed_fn(api, fn, block_size: int = 32):
 
     Densification runs *inside* the (to-be-jitted) call, so the resident /
     HBM-streamed weights are the packed bytes and the dequant fuses into the
-    consuming matmuls.
+    consuming matmuls. This is the XLA fallback contract; the fused contract
+    (``fused=True`` below) skips densification entirely.
     """
     def wrapped(packed_params, *rest):
         params = densify_params(packed_params, block_size,
@@ -177,13 +254,36 @@ def make_packed_fn(api, fn, block_size: int = 32):
     return wrapped
 
 
-def make_packed_serve_step(api, block_size: int = 32):
-    """serve_step over packed params (the roofline-optimized decode path)."""
+def _fused_api(api, block_size: int):
+    """A ModelApi clone whose serving entry points run packed leaves through
+    the fused Pallas dequant-GEMM dispatch (``kernels.dispatch.qmatmul``)."""
+    if api.with_qmm is None:
+        raise ValueError(
+            f"model family {api.cfg.family!r} has no qmm hook; use the "
+            "densify path (fused=False)")
+    from repro.kernels.dispatch import make_qmm
+    return api.with_qmm(make_qmm(block_size=block_size, mode="pallas"))
+
+
+def make_packed_serve_step(api, block_size: int = 32, *,
+                           fused: bool = False):
+    """serve_step over packed params (the roofline-optimized decode path).
+
+    ``fused=True`` returns a step where each projection calls the Pallas
+    dequant-GEMM on its packed leaf (interpret-mode off TPU); ``fused=False``
+    keeps the XLA densify-inside-jit contract. Both take the same packed
+    pytree and produce the same logits (same codes).
+    """
+    if fused:
+        return _fused_api(api, block_size).serve_step
     return make_packed_fn(api, api.serve_step, block_size)
 
 
-def make_packed_prefill_slot(api, block_size: int = 32):
+def make_packed_prefill_slot(api, block_size: int = 32, *,
+                             fused: bool = False):
     """Single-slot prefill-insert over packed params (see ModelApi)."""
+    if fused:
+        return _fused_api(api, block_size).prefill_slot
     return make_packed_fn(api, api.prefill_slot, block_size)
 
 
