@@ -14,6 +14,12 @@ the XLA densify-inside-jit fallback (``densify``) — and reports one table:
     Identical across paths by construction (same packed tree) — the fused
     rows demonstrate the bytes contract is served by the explicit kernels,
     not just hoped for from XLA fusion.
+  - kv_bytes_per_slot: resident KV-cache HBM divided by batch slots. The
+    dense layout commits max_len tokens per slot up front; the paged layout
+    (kv_layout="paged") commits only the page pool, which this bench sizes
+    to the workload's live-token demand — the measured (not asserted) memory
+    win of block-table paging. Token streams are bit-identical across
+    layouts, so the kv rows differ ONLY in this column and wall time.
 
 CPU wall-clock is reported for completeness but is NOT the serving claim —
 off-TPU the fused path runs the Pallas interpreter (slow, correctness-only)
@@ -36,14 +42,25 @@ from repro.models import get_model                     # noqa: E402
 from repro.serve.engine import ElasticEngine, Request  # noqa: E402
 
 FORMATS = ("bf16", "mxint8", "mxint4")
+PROMPT_LEN = 8
 
 
 def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
-               n_requests, max_new, vocab):
+               n_requests, max_new, vocab, kv_layout="dense", page_size=8):
+    kv_kw = {}
+    if kv_layout == "paged":
+        # Size the pool to the workload's live-token demand (prompt +
+        # generated tokens per slot), NOT to slots*max_len — that sizing
+        # freedom is the whole point of paging.
+        per_slot = -(-(PROMPT_LEN + max_new) // page_size)
+        kv_kw = dict(kv_layout="paged", kv_page_size=page_size,
+                     kv_num_pages=slots * per_slot + 1)
     eng = ElasticEngine(api, anchor, batch_slots=slots, max_len=max_len,
-                        param_template=params, fused=fused)
+                        param_template=params, fused=fused, **kv_kw)
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(0, vocab, 8).astype(np.int32),
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, vocab, PROMPT_LEN)
+                    .astype(np.int32),
                     max_new=max_new) for i in range(n_requests)]
     eng.generate(reqs[:1], fmt_override=fmt)    # warmup: compile + SS pass
     t0 = time.perf_counter()
@@ -62,12 +79,14 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
         "fmt": fmt,
         "path": ("fused" if fused else "densify") if fmt != "bf16"
                 else "dense",
+        "kv": kv_layout,
         "containers": "+".join(st["containers"][fmt]),
         "weight_bytes": wbytes,
         "ticks": ticks,
         "tokens": toks,
         "tokens_per_tick": tpt,
         "weight_bytes_per_token": wbytes / max(tpt, 1e-9),
+        "kv_bytes_per_slot": st["kv_bytes_per_slot"],
         "wall_s": dt,
     }
 
@@ -82,6 +101,11 @@ def main():
     ap.add_argument("--paths", default="both",
                     choices=("both", "fused", "densify"),
                     help="packed-serving contract(s) to benchmark")
+    ap.add_argument("--kv", default="both",
+                    choices=("both", "dense", "paged"),
+                    help="KV-cache layout(s) to benchmark")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page for the paged layout")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -93,28 +117,41 @@ def main():
 
     kw = dict(slots=args.slots, max_len=args.max_len,
               n_requests=args.requests, max_new=args.max_new,
-              vocab=cfg.vocab)
+              vocab=cfg.vocab, page_size=args.page_size)
     want_fused = args.paths in ("both", "fused")
     want_dense = args.paths in ("both", "densify")
+    layouts = ("dense", "paged") if args.kv == "both" else (args.kv,)
     rows = []
-    for fmt in FORMATS:
-        if fmt == "bf16":      # dense pseudo-format: one path, no packing
-            rows.append(bench_path(api, anchor, params, fmt, False, **kw))
-            continue
-        if want_fused:
-            rows.append(bench_path(api, anchor, params, fmt, True, **kw))
-        if want_dense:
-            rows.append(bench_path(api, anchor, params, fmt, False, **kw))
+    for kv in layouts:
+        for fmt in FORMATS:
+            if fmt == "bf16":  # dense pseudo-format: one path, no packing
+                rows.append(bench_path(api, anchor, params, fmt, False,
+                                       kv_layout=kv, **kw))
+                continue
+            if want_fused:
+                rows.append(bench_path(api, anchor, params, fmt, True,
+                                       kv_layout=kv, **kw))
+            if want_dense:
+                rows.append(bench_path(api, anchor, params, fmt, False,
+                                       kv_layout=kv, **kw))
 
     base = next(r for r in rows if r["fmt"] == "bf16")
-    print("fmt,path,containers,weight_bytes,ticks,tokens,tokens_per_tick,"
-          "weight_bytes_per_token,bytes_cut_vs_bf16,wall_s")
+    # KV ratios are vs the DENSE layout; without a dense row (--kv paged)
+    # there is no baseline to compare against, so print n/a rather than a
+    # misleading same-layout 1.00x.
+    kv_base = next((r for r in rows if r["kv"] == "dense"), None)
+    print("fmt,path,kv,containers,weight_bytes,ticks,tokens,tokens_per_tick,"
+          "weight_bytes_per_token,bytes_cut_vs_bf16,kv_bytes_per_slot,"
+          "kv_cut_vs_dense,wall_s")
     for r in rows:
         cut = base["weight_bytes_per_token"] / r["weight_bytes_per_token"]
-        print(f"{r['fmt']},{r['path']},{r['containers']},"
+        kv_cut = "n/a" if kv_base is None else \
+            f"{kv_base['kv_bytes_per_slot'] / max(r['kv_bytes_per_slot'], 1):.2f}x"
+        print(f"{r['fmt']},{r['path']},{r['kv']},{r['containers']},"
               f"{r['weight_bytes']},{r['ticks']},{r['tokens']},"
               f"{r['tokens_per_tick']:.2f},"
               f"{r['weight_bytes_per_token']:.0f},{cut:.2f}x,"
+              f"{r['kv_bytes_per_slot']},{kv_cut},"
               f"{r['wall_s']:.2f}")
 
 

@@ -12,6 +12,11 @@ step — either way HBM weight traffic is the packed bytes. Requests are
 admitted into individual slots (staggered arrivals never re-prefill active
 sequences; prompts pad to power-of-two buckets so prefill compiles once per
 bucket), and the format is pinned per batch, never switched mid-sequence.
+
+The engine runs with the paged KV cache (kv_layout="paged"): KV HBM is
+committed one page at a time as sequences grow and recycled the moment a
+request retires, instead of preallocating max_len per slot — token streams
+are identical to the dense layout (see docs/serving_internals.md §5).
 """
 import sys
 
@@ -41,7 +46,11 @@ def main():
                                   (0, "mxint8")),
                           hysteresis=1)
     eng = ElasticEngine(api, anchor, batch_slots=4, max_len=64,
-                        policy=policy, param_template=params)
+                        policy=policy, param_template=params,
+                        kv_layout="paged", kv_page_size=8,
+                        kv_num_pages=4 * 3 + 1)   # live-token sized, not
+    #                                               slots*max_len — pages
+    #                                               recycle across the burst
 
     rng = np.random.default_rng(0)
     print("LOW LOAD: 3 requests")
@@ -75,6 +84,12 @@ def main():
     for fmt in st["formats_cached"]:
         print(f"  {fmt:>7}: containers={st['containers'][fmt]} "
               f"weight_bytes={st['weight_bytes'][fmt]}")
+    print(f"kv cache: layout={st['kv_layout']} "
+          f"bytes/slot={st['kv_bytes_per_slot']} "
+          f"(pool={st['kv_total_pages']} pages x {st['kv_page_size']} tok, "
+          f"high-water {st['kv_pages_hwm']}, "
+          f"{st['kv_pages_alloc']} allocs / {st['kv_pages_freed']} frees "
+          "-> pages recycled across the burst)")
     print("one anchor checkpoint served "
           f"{len(st['formats_cached'])} precisions; each decode tick streams "
           "the PACKED bytes above, not dense bf16.")

@@ -9,6 +9,10 @@ Packing layouts (little-endian within a byte, along the last axis):
   2-bit: 4 codes/byte      4-bit: 2 codes/byte      6-bit: 4 codes / 3 bytes
   8-bit: identity          3/5/7-bit: stored at the next packable width
          (3->4, 5->6, 7->8); the *format* stays exact — only storage rounds up.
+
+The serving-side int4 nibble layouts (split-N for the fused kernel, legacy
+split-K for densify-only paths) and the conventions around them are
+documented in docs/serving_internals.md §3.
 """
 from __future__ import annotations
 

@@ -25,6 +25,11 @@ Fallback conditions (leaf not 2D after scan slicing, legacy split-K int4
 layout, non-even shapes) silently take the densify path; ``stats()`` counts
 which path each traced call took so benchmarks and CI can assert the fused
 kernels are actually live.
+
+Layout conventions this layer depends on — scan-stale leaf metadata
+(contraction dim re-derived as ndim-2), moved-last ``(N, K/bs)`` scales
+(the kernels consume the transpose), split-N vs split-K nibble packing —
+are documented in docs/serving_internals.md §§1-3.
 """
 from __future__ import annotations
 

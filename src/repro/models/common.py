@@ -200,6 +200,13 @@ NO_QUANT = QuantCtx()
 CACHE_BATCH_AXIS = 1
 
 
+def is_paged_cache(cache) -> bool:
+    """True for the paged KV layout (shared page pools + per-slot block
+    table) — its pool leaves have NO batch axis, so the dense slot-surgery
+    helpers below must not touch them."""
+    return isinstance(cache, dict) and "block_table" in cache
+
+
 def single_slot_cache(cache, batch_axis: int = CACHE_BATCH_AXIS):
     """A zeroed copy of ``cache`` with the batch axis shrunk to one slot."""
     return jax.tree_util.tree_map(
@@ -223,11 +230,21 @@ def insert_cache_slot(cache, single, slot, batch_axis: int = CACHE_BATCH_AXIS):
 def make_prefill_slot(prefill):
     """Derive a single-slot prefill-insert from a batched ``prefill``.
 
-    The returned fn runs ONE request (tokens ``(1, S)``) through a batch-1
+    Dense KV layout: runs ONE request (tokens ``(1, S)``) through a batch-1
     scratch cache and writes the result into slot ``slot`` of the live batched
-    cache. Returns ``(logits (V,), new_cache, new_len scalar)``.
+    cache. Paged KV layout: no scratch/insert at all — the prompt's KV
+    scatters straight into the pages the slot's block-table row maps, which
+    cannot touch any other slot's pages (physical pages are allocated to at
+    most one slot). Returns ``(logits (V,), new_cache, new_len scalar)``.
     """
     def prefill_slot(params, batch, cache, slot):
+        if is_paged_cache(cache):
+            row = jax.lax.dynamic_slice_in_dim(cache["block_table"], slot, 1,
+                                               axis=0)
+            logits, filled, clen = prefill(
+                params, batch, dict(cache, block_table=row))
+            return (logits[0],
+                    dict(filled, block_table=cache["block_table"]), clen[0])
         small = single_slot_cache(cache)
         logits, filled, clen = prefill(params, batch, small)
         return logits[0], insert_cache_slot(cache, filled, slot), clen[0]

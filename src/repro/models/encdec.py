@@ -193,7 +193,14 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None):
                                  mask.astype(jnp.float32), cfg)
         return loss, {"ce": loss}
 
-    def init_cache(b, s_max, dtype=None, s_enc=None):
+    def init_cache(b, s_max, dtype=None, s_enc=None, *, kv_layout="dense",
+                   page_size=16, num_pages=None):
+        if kv_layout != "dense":
+            raise ValueError(
+                f"kv_layout={kv_layout!r}: paged KV requires a pure-attention"
+                " stack; the encdec family keeps per-slot cross-attention KV "
+                "whose paging is unimplemented — use kv_layout='dense'")
+        del page_size, num_pages
         dtype = dtype or cfg.compute_dtype
         s_enc = s_enc or max(1, s_max // max(cfg.audio_downsample, 1))
         blk = {

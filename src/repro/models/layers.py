@@ -167,6 +167,68 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 # =============================================================================
+# Paged KV cache (block-table indirection over a shared page pool)
+# =============================================================================
+# Layout (see docs/serving_internals.md): each attention layer owns a page
+# pool (num_pages, page_size, Hkv, D); a slot's KV lives in the physical pages
+# its block-table row names, in logical order — position p maps to page
+# row[p // page_size], offset p % page_size. Page 0 is a reserved scratch
+# page: unmapped block-table entries point at it, so retired slots scribble
+# there instead of on recycled pages, and every read of it is masked by
+# cache_len. Values at any *valid* position (< cache_len) are bit-identical
+# to the dense layout's, which is what makes dense-vs-paged token identity a
+# testable contract rather than a tolerance.
+
+
+def paged_prefill_update(pool: jax.Array, kv_new: jax.Array,
+                         block_table: jax.Array) -> jax.Array:
+    """Scatter prefill K/V (B, S, Hkv, D) into the pages each row maps.
+
+    S is zero-padded up to a whole number of pages (matching the dense
+    layout, whose cache is zero beyond the written range). Rows' mapped
+    pages are disjoint by construction (the engine allocates each physical
+    page to at most one slot), so the batched scatter never collides —
+    except on the scratch page 0, where last-write-wins is harmless.
+    """
+    b, s, hkv, d = kv_new.shape
+    ps = pool.shape[1]
+    n_p = -(-s // ps)
+    pad = n_p * ps - s
+    if pad:
+        kv_new = jnp.pad(kv_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vals = kv_new.astype(pool.dtype).reshape(b * n_p, ps, hkv, d)
+    ids = jax.lax.slice_in_dim(block_table, 0, n_p, axis=1).reshape(-1)
+    return pool.at[ids].set(vals)
+
+
+def paged_decode_append(pool: jax.Array, kv_tok: jax.Array,
+                        block_table: jax.Array,
+                        cache_len: jax.Array) -> jax.Array:
+    """Write one token's K/V (B, 1, Hkv, D) at each slot's cache_len.
+
+    The engine maps the destination page before the tick runs, so the
+    translated (page, offset) is always a live page for active slots; free
+    slots land on scratch page 0.
+    """
+    ps = pool.shape[1]
+    phys = jnp.take_along_axis(block_table, (cache_len // ps)[:, None],
+                               axis=1)[:, 0]
+    return pool.at[phys, cache_len % ps].set(kv_tok[:, 0].astype(pool.dtype))
+
+
+def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize each slot's logical KV view: (B, max_pages*ps, Hkv, D).
+
+    A plain gather — positions come back in logical order, so the result
+    drops into ``decode_attention`` exactly like a dense cache (garbage past
+    cache_len is masked there, same as dense pad positions).
+    """
+    b, mp = block_table.shape
+    pages = pool[block_table]                 # (B, MP, ps, Hkv, D)
+    return pages.reshape(b, mp * pool.shape[1], *pool.shape[2:])
+
+
+# =============================================================================
 # Attention block
 # =============================================================================
 def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
@@ -174,10 +236,16 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
                     kv_cache: Optional[Tuple] = None,
                     cache_len: Optional[jax.Array] = None,
                     cross_kv: Optional[Tuple] = None,
-                    causal: bool = True):
+                    causal: bool = True,
+                    block_table: Optional[jax.Array] = None):
     """Self- (or cross-) attention. Returns (out, new_kv) where new_kv is the
     (k, v) tensors produced at this layer (for cache building) or the updated
-    cache in decode mode."""
+    cache in decode mode.
+
+    With ``block_table`` set, ``kv_cache`` holds paged pools
+    (num_pages, page_size, Hkv, D): the new token is appended through the
+    block-table indirection and attention gathers the slot's pages back into
+    logical order before the same masked single-query softmax."""
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
@@ -199,7 +267,17 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
         q = ctx.dense(x, p["wq"], name + ".wq").reshape(b, s, h, hd)
         k, v = cross_kv
 
-    if kv_cache is not None:
+    if kv_cache is not None and block_table is not None:
+        # paged decode: append through the block table, gather the slot's
+        # pages back into logical order, attend with the same length mask.
+        kc, vc = kv_cache
+        kc = paged_decode_append(kc, k, block_table, cache_len)
+        vc = paged_decode_append(vc, v, block_table, cache_len)
+        out = decode_attention(q, paged_gather(kc, block_table),
+                               paged_gather(vc, block_table), cache_len + 1,
+                               window=cfg.sliding_window)
+        new_kv = (kc, vc)
+    elif kv_cache is not None:
         # decode: write this token's k/v at each slot's own cache_len, attend
         # over the cache. Slots advance independently (continuous batching
         # admits/retires requests per slot), so the write index is per batch

@@ -203,21 +203,37 @@ def param_axes(cfg: ModelConfig) -> Dict:
 # Forward
 # =============================================================================
 def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
-           cache_slice, cache_len, prefill: bool):
-    """One block. Returns (x, new_cache_slice)."""
+           cache_slice, cache_len, prefill: bool, block_table=None):
+    """One block. Returns (x, new_cache_slice).
+
+    ``block_table`` (B, max_pages) selects the paged KV layout: attention
+    cache slices hold page pools (``k_pages``/``v_pages``) instead of
+    per-slot contiguous buffers, and all reads/writes go through the
+    block-table indirection (see layers.py paged helpers).
+    """
     mk, fk = mixer_kind(cfg, j), ffn_kind(cfg, j)
     name = f"blk{j}.{mk}"
     new_cache: Dict[str, Any] = {}
     h = L.rms_norm(x, p["mixer_norm"], cfg.norm_eps)
     if mk == "attn":
+        paged = cache_slice is not None and "k_pages" in cache_slice
         kv = None
         if cache_slice is not None and not prefill:
-            kv = (cache_slice["k"], cache_slice["v"])
+            kv = (cache_slice["k_pages"], cache_slice["v_pages"]) if paged \
+                else (cache_slice["k"], cache_slice["v"])
         out, new_kv = L.attention_block(
             ctx, h, p["attn"], cfg, positions, name,
-            kv_cache=kv, cache_len=cache_len)
+            kv_cache=kv, cache_len=cache_len,
+            block_table=block_table if paged else None)
         if cache_slice is not None:
-            if prefill:
+            if prefill and paged:
+                k_new, v_new = new_kv
+                new_cache = {
+                    "k_pages": L.paged_prefill_update(
+                        cache_slice["k_pages"], k_new, block_table),
+                    "v_pages": L.paged_prefill_update(
+                        cache_slice["v_pages"], v_new, block_table)}
+            elif prefill:
                 k_new, v_new = new_kv
                 kc = jax.lax.dynamic_update_slice_in_dim(
                     cache_slice["k"], k_new.astype(cache_slice["k"].dtype),
@@ -226,6 +242,8 @@ def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
                     cache_slice["v"], v_new.astype(cache_slice["v"].dtype),
                     0, axis=1)
                 new_cache = {"k": kc, "v": vc}
+            elif paged:
+                new_cache = {"k_pages": new_kv[0], "v_pages": new_kv[1]}
             else:
                 new_cache = {"k": new_kv[0], "v": new_kv[1]}
     elif mk == "mamba":
@@ -273,6 +291,10 @@ def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
     # `model` — a Megatron-SP analogue. No-op when seq doesn't divide.
     resid_axes = ("batch", "seq_sp" if (cfg.seq_sharding and x.shape[1] > 1)
                   else "seq", None)
+    # Paged KV layout: the block table is per-slot and shared across layers
+    # (each layer has its own pool of identical shape), so it rides outside
+    # the scanned cache leaves and the scan body closes over it.
+    block_table = cache.get("block_table") if cache is not None else None
 
     def group_body(carry, xs):
         xv, aux = carry
@@ -283,7 +305,7 @@ def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
 
             def layer_call(xv_, p_, cs_, _j=j):
                 return _layer(ctx, xv_, p_, cfg, _j, positions, cs_,
-                              cache_len, prefill)
+                              cache_len, prefill, block_table)
 
             if cfg.remat_inner and cfg.scan_group > 1:
                 layer_call = jax.checkpoint(
@@ -315,6 +337,8 @@ def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
             stacked = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *new_blocks)
             new_cache = {"blocks": stacked}
+            if block_table is not None:
+                new_cache["block_table"] = block_table
         else:
             new_cache = None
     elif cache is None:
@@ -330,6 +354,8 @@ def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
             body, (x, jnp.zeros((), jnp.float32)),
             (params["blocks"], cache["blocks"]))
         new_cache = {"blocks": new_blocks}
+        if block_table is not None:
+            new_cache["block_table"] = block_table
     hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     return hidden, new_cache, aux
 
@@ -483,16 +509,59 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         return loss + aux, {"ce": loss, "aux": aux}
 
     # ---- serving ----------------------------------------------------------
-    def init_cache(b, s_max, dtype=None):
+    def init_cache(b, s_max, dtype=None, *, kv_layout="dense",
+                   page_size=16, num_pages=None):
+        """KV cache pytree.
+
+        ``kv_layout="dense"`` (default): per-slot contiguous buffers
+        (B, s_max, Hkv, D) — s_max HBM is committed per slot up front.
+
+        ``kv_layout="paged"``: a shared page pool per layer
+        (num_pages, page_size, Hkv, D) plus a per-slot ``block_table``
+        (B, ceil(s_max/page_size)) of physical page ids, so s_max is a
+        per-request *bound* and HBM is committed page-by-page as sequences
+        grow. Physical page 0 is reserved scratch (unmapped entries point
+        there); ``num_pages=None`` sizes the pool to dense-equivalent
+        capacity + the scratch page. Requires a pure-attention stack —
+        recurrent state (mamba/rwkv) has no sequence axis to page.
+        """
         dtype = dtype or cfg.compute_dtype
         s_max = s_max + cfg.vision_tokens   # room for prepended image embeds
-        return {"blocks": [
-            jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape),
-                _cache_for_block(cfg, j, b, s_max, dtype))
-            for j in range(cfg.scan_group)]}
+        if kv_layout == "dense":
+            return {"blocks": [
+                jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None],
+                                               (cfg.n_groups,) + x.shape),
+                    _cache_for_block(cfg, j, b, s_max, dtype))
+                for j in range(cfg.scan_group)]}
+        if kv_layout != "paged":
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                             "one of ('dense', 'paged')")
+        bad = [mixer_kind(cfg, j) for j in range(cfg.scan_group)
+               if mixer_kind(cfg, j) != "attn"]
+        if bad:
+            raise ValueError(
+                f"kv_layout='paged' requires a pure-attention stack; "
+                f"family {cfg.family!r} has {bad} mixers whose recurrent "
+                "state cannot be paged — use kv_layout='dense'")
+        pages_per_slot = -(-s_max // page_size)
+        if num_pages is None:
+            num_pages = b * pages_per_slot + 1   # + reserved scratch page 0
+        pool = functools.partial(
+            jnp.zeros, (cfg.n_groups, num_pages, page_size,
+                        cfg.n_kv_heads, cfg.hd), dtype)
+        return {"blocks": [{"k_pages": pool(), "v_pages": pool()}
+                           for _ in range(cfg.scan_group)],
+                "block_table": jnp.zeros((b, pages_per_slot), jnp.int32)}
 
-    def cache_axes():
+    def cache_axes(kv_layout="dense"):
+        if kv_layout == "paged":
+            # pools (G, P, ps, Hkv, D): shard the page axis like the dense
+            # sequence axis; the tiny block table replicates per batch row.
+            ax = {"k_pages": (None, "kv_seq", None, None, None),
+                  "v_pages": (None, "kv_seq", None, None, None)}
+            return {"blocks": [dict(ax) for _ in range(cfg.scan_group)],
+                    "block_table": ("batch", None)}
         return {"blocks": [_cache_axes_for_block(cfg, j)
                            for j in range(cfg.scan_group)]}
 

@@ -125,6 +125,19 @@ class ElasticEngine:
     dispatch (True) vs XLA densify-inside-jit (False); None = fused on TPU.
     Fixed per engine instance, so each contract gets its own jitted
     executables and no stale-cache hazards exist.
+
+    ``kv_layout`` selects the KV-cache layout: ``"dense"`` preallocates a
+    contiguous (slots, max_len) buffer per layer; ``"paged"`` serves from a
+    shared page pool plus per-slot block tables, committing HBM one
+    ``kv_page_size``-token page at a time as sequences grow. The engine owns
+    the host-side free list: pages are allocated at admission (enough to
+    hold the prompt plus the first decode write), one page at a time as
+    decode crosses page boundaries, and returned the moment a slot retires —
+    so the pool only needs to cover the *live* token count, not
+    slots × max_len. Exhaustion raises ``RuntimeError`` loudly (never a
+    silent truncation); size the pool with ``kv_num_pages`` (None = dense
+    capacity: slots × ceil(max_len/page) + 1 scratch page). Token streams
+    are bit-identical across layouts (same values at every valid position).
     """
 
     def __init__(self, api: ModelApi, anchor: AnchorModel, *,
@@ -133,7 +146,9 @@ class ElasticEngine:
                  param_template=None, packed: bool = True,
                  fused: Optional[bool] = None, seed: int = 0,
                  temperature: float = 1.0, top_p: float = 1.0,
-                 bucket_prompts: bool = True):
+                 bucket_prompts: bool = True,
+                 kv_layout: str = "dense", kv_page_size: int = 16,
+                 kv_num_pages: Optional[int] = None):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
@@ -163,8 +178,29 @@ class ElasticEngine:
         # Length bucketing needs exact masking of right-padded prompts; the
         # recurrent mixers (mamba/rwkv) fold pad tokens into their state, so
         # only pure-attention stacks bucket.
-        self._bucket = bucket_prompts and api.cfg.family != "ssm" \
-            and api.cfg.attn_every <= 0 and api.cfg.family != "encdec"
+        pure_attn = api.cfg.family not in ("ssm", "encdec") \
+            and api.cfg.attn_every <= 0
+        self._bucket = bucket_prompts and pure_attn
+        # Paged KV: only attention KV has a sequence axis to page over. The
+        # pure-attention check itself lives in the model's init_cache (the
+        # single source of truth for what a family can page); the eval_shape
+        # below surfaces its ValueError at engine construction.
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                             "one of ('dense', 'paged')")
+        self.kv_layout = kv_layout
+        self.kv_page_size = kv_page_size
+        self.kv_num_pages = kv_num_pages
+        self._kv_pages_alloc = 0
+        self._kv_pages_freed = 0
+        self._kv_pages_hwm = 0
+        cache_shape = jax.eval_shape(lambda: self._init_cache(self.slots))
+        self._kv_cache_bytes = sum(
+            l.size * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(cache_shape))
+        self._kv_total_pages = \
+            cache_shape["blocks"][0]["k_pages"].shape[1] \
+            if kv_layout == "paged" else 0
         # Per-slot RNG: reseeded from (engine key, rid) at admission.
         self._key = jax.random.PRNGKey(seed)
         self._slot_keys = jax.random.split(self._key, self.slots)
@@ -185,6 +221,35 @@ class ElasticEngine:
             self._prefill_traces += 1    # runs at trace time only
             return fn(*args)
         return wrapped
+
+    # ---- KV cache ---------------------------------------------------------
+    def _init_cache(self, b):
+        if self.kv_layout == "paged":
+            return self.api.init_cache(b, self.max_len, kv_layout="paged",
+                                       page_size=self.kv_page_size,
+                                       num_pages=self.kv_num_pages)
+        return self.api.init_cache(b, self.max_len)
+
+    def _alloc_pages(self, free: List[int], n: int, why: str) -> List[int]:
+        """Pop ``n`` physical pages off the free list, or die loudly.
+
+        Exhaustion is an error, never a silent truncation: the caller asked
+        for capacity the pool doesn't have, and the fix (bigger
+        ``kv_num_pages``, fewer slots, shorter ``max_len``) is an operator
+        decision, not something to paper over mid-decode.
+        """
+        if len(free) < n:
+            raise RuntimeError(
+                f"KV page pool exhausted at {why}: need {n} page(s), "
+                f"{len(free)} free (pool = {self._kv_total_pages} pages x "
+                f"{self.kv_page_size} tokens, {self.slots} slots, "
+                f"{self._kv_pages_hwm} pages high-water). Increase "
+                "kv_num_pages, shrink batch_slots/max_len, or admit less.")
+        got = [free.pop() for _ in range(n)]
+        self._kv_pages_alloc += n
+        in_use = self._kv_total_pages - 1 - len(free)
+        self._kv_pages_hwm = max(self._kv_pages_hwm, in_use)
+        return got
 
     # ---- weights ----------------------------------------------------------
     def _serves_packed(self, fmt_name: str) -> bool:
@@ -242,10 +307,18 @@ class ElasticEngine:
         slot_len = [0] * self.slots        # host mirror of cache_len
         b = self.slots
 
-        cache = self.api.init_cache(b, self.max_len)
+        cache = self._init_cache(b)
         cache_len = jnp.zeros((b,), jnp.int32)
         tokens = jnp.zeros((b, 1), jnp.int32)
         pinned: Optional[str] = None       # format for this batch's lifetime
+        paged = self.kv_layout == "paged"
+        if paged:
+            ps = self.kv_page_size
+            # host-side page bookkeeping: the block table mirror ships to the
+            # device as a (tiny) step argument whenever it changes; page 0 is
+            # reserved scratch, so allocatable ids are 1..P-1.
+            free_pages = list(range(self._kv_total_pages - 1, 0, -1))
+            bt = np.zeros((b, cache["block_table"].shape[1]), np.int32)
 
         while pending or any(a is not None for a in active):
             if pinned is None:             # engine drained: re-pick format
@@ -267,8 +340,17 @@ class ElasticEngine:
                     f"prompt ({prompt.size}) exceeds cache ({self.max_len})"
                 self._slot_keys = self._slot_keys.at[i].set(
                     jax.random.fold_in(self._key, r.rid))
-                logits, cache, new_len = prefill_slot(
-                    params, self._prefill_batch(prompt), cache, i)
+                pbatch = self._prefill_batch(prompt)
+                if paged:
+                    # Pages to hold the (possibly bucket-padded) prompt AND
+                    # the first decode write at position prompt.size.
+                    blen = pbatch["tokens"].shape[1]
+                    need = max(-(-blen // ps), prompt.size // ps + 1)
+                    bt[i, :need] = self._alloc_pages(
+                        free_pages, need, f"admission of rid={r.rid}")
+                    cache["block_table"] = jnp.asarray(bt)
+                logits, cache, new_len = prefill_slot(params, pbatch,
+                                                      cache, i)
                 cache_len = cache_len.at[i].set(new_len)
                 slot_len[i] = prompt.size
                 first = int(self._sample(logits[None], greedy, slot=i)[0])
@@ -278,6 +360,9 @@ class ElasticEngine:
                 self._tokens_out += 1
                 if len(r.out_tokens) >= r.max_new:
                     r.done = True          # degenerate max_new<=1
+                    if paged:              # row -> scratch BEFORE any reuse
+                        self._free_slot_pages(free_pages, bt, i)
+                        cache["block_table"] = jnp.asarray(bt)
                 else:
                     active[i] = r
 
@@ -287,6 +372,21 @@ class ElasticEngine:
 
             # ---- decode tick: fused step over all slots, free slots masked
             mask = np.asarray([a is not None for a in active], np.int32)
+            if paged:
+                # Map the page each active slot's write position lands in
+                # BEFORE the step runs — this is where the pool grows (and
+                # where exhaustion surfaces, loudly, mid-stream).
+                dirty = False
+                for i, r in enumerate(active):
+                    if r is None:
+                        continue
+                    pg = slot_len[i] // ps
+                    if bt[i, pg] == 0:
+                        bt[i, pg] = self._alloc_pages(
+                            free_pages, 1, f"decode tick for rid={r.rid}")[0]
+                        dirty = True
+                if dirty:
+                    cache["block_table"] = jnp.asarray(bt)
             logits, cache = step(params, {"tokens": tokens}, cache, cache_len)
             cache_len = cache_len + jnp.asarray(mask)
             nxt = self._sample(logits, greedy)
@@ -305,9 +405,22 @@ class ElasticEngine:
                         slot_len[i] >= self.max_len - 1:
                     r.done = True
                     active[i] = None       # slot re-admissible next tick
+                    if paged:              # pages recycle on the next admit
+                        self._free_slot_pages(free_pages, bt, i)
+                        cache["block_table"] = jnp.asarray(bt)
             if all(a is None for a in active):
                 pinned = None
         return requests
+
+    def _free_slot_pages(self, free_pages: List[int], bt: np.ndarray,
+                         slot: int) -> None:
+        """Return a retired slot's pages to the free list and point its
+        block-table row at the scratch page (0) so any further masked write
+        from the still-batched slot lands there, never on a recycled page."""
+        used = bt[slot][bt[slot] != 0]
+        free_pages.extend(int(p) for p in used)
+        self._kv_pages_freed += used.size
+        bt[slot, :] = 0
 
     def _sample(self, logits, greedy: bool, slot: Optional[int] = None):
         """Greedy argmax, or a temperature/top-p draw from per-slot streams.
@@ -352,4 +465,12 @@ class ElasticEngine:
             "current": self.current_fmt,
             "fused": self.fused,
             "prefill_traces": self._prefill_traces,
+            "kv_layout": self.kv_layout,
+            "kv_cache_bytes": self._kv_cache_bytes,
+            "kv_bytes_per_slot": self._kv_cache_bytes // self.slots,
+            "kv_page_size": self.kv_page_size,
+            "kv_total_pages": self._kv_total_pages,
+            "kv_pages_alloc": self._kv_pages_alloc,
+            "kv_pages_freed": self._kv_pages_freed,
+            "kv_pages_hwm": self._kv_pages_hwm,
         }

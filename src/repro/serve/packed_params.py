@@ -20,6 +20,10 @@ MXINT4 leaves use the split-N nibble layout (``PackedInt4Leaf`` with
 ``layout="splitn"``): byte column j holds output column j in the low nibble
 and column j + N/2 in the high nibble, which is exactly what
 ``mx_matmul_int4_pallas`` streams.
+
+The layout conventions these containers rely on (scan-stale metadata,
+moved-last scales, split-N vs split-K) are documented in
+docs/serving_internals.md.
 """
 from __future__ import annotations
 

@@ -1,0 +1,161 @@
+"""Paged KV-cache serving: dense-vs-paged token identity, page-pool
+exhaustion, page recycling, and block-table isolation.
+
+The contract under test (docs/serving_internals.md): the paged layout is a
+pure re-indexing of KV storage — every valid position holds bit-identical
+values to the dense layout, so greedy AND seeded-sampling token streams must
+match exactly, under both packed-serving contracts (fused Pallas dispatch /
+XLA densify-inside-jit) and at both a packed format (mxint8) and the dense
+bf16 pseudo-format.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_anchor
+from repro.core.qat import QATConfig
+from repro.models import get_model
+from repro.serve.engine import ElasticEngine, Request
+
+QAT = QATConfig(formats=("mxint4", "mxint8"), anchor="mxint8", block_size=32)
+PS = 8  # page size; max_len=32 -> 4 pages/slot, divides so gathered
+#         Skv == dense Skv and softmax reductions see identical shapes
+
+
+def _setup(arch="smollm-135m"):
+    cfg = get_reduced(arch)
+    api = get_model(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    anchor = make_anchor(params, QAT)
+    return cfg, api, params, anchor
+
+
+def _engine(api, anchor, params, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 32)
+    return ElasticEngine(api, anchor, param_template=params, **kw)
+
+
+def _reqs(cfg, n, max_new=5, plen=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, plen)
+                    .astype(np.int32), max_new=max_new) for i in range(n)]
+
+
+@pytest.mark.parametrize("fmt", ["mxint8", "bf16"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_paged_matches_dense_token_for_token(fmt, fused):
+    """Acceptance gate: greedy streams identical across KV layouts, for both
+    serving contracts, at a packed format and the bf16 pseudo-format (where
+    both contracts serve the same dense step — still both exercised)."""
+    cfg, api, params, anchor = _setup()
+    streams = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(api, anchor, params, fused=fused, kv_layout=layout,
+                      kv_page_size=PS)
+        reqs = _reqs(cfg, 3, max_new=5, seed=7)
+        eng.generate(reqs, fmt_override=fmt)
+        streams[layout] = [r.out_tokens for r in reqs]
+    assert streams["dense"] == streams["paged"]
+
+
+@pytest.mark.slow
+def test_paged_matches_dense_seeded_sampling():
+    """Sampling depends only on logits + per-slot RNG streams; identical
+    logits across layouts means identical sampled streams."""
+    cfg, api, params, anchor = _setup()
+    streams = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(api, anchor, params, kv_layout=layout, kv_page_size=PS,
+                      seed=3, temperature=1.0, top_p=0.9)
+        reqs = _reqs(cfg, 3, max_new=5, seed=11)
+        eng.generate(reqs, greedy=False, fmt_override="mxint8")
+        streams[layout] = [r.out_tokens for r in reqs]
+    assert streams["dense"] == streams["paged"]
+
+
+def test_page_pool_exhaustion_raises_loudly():
+    """An undersized pool must raise (admission- or decode-time), never
+    silently truncate: kv_num_pages=3 gives 2 allocatable pages of 8 tokens,
+    so one request decoding past position 16 starves the pool."""
+    cfg, api, params, anchor = _setup()
+    eng = _engine(api, anchor, params, kv_layout="paged", kv_page_size=PS,
+                  kv_num_pages=3)
+    with pytest.raises(RuntimeError, match="KV page pool exhausted"):
+        eng.generate(_reqs(cfg, 2, max_new=12, seed=1),
+                     fmt_override="mxint8")
+
+
+def test_pages_recycled_across_retire_admit_churn():
+    """6 requests through 2 slots with a pool that only fits the concurrent
+    pair: completes iff retire returns pages to the free list, and the
+    streams still match a roomy dense run. Allocation stats prove reuse."""
+    cfg, api, params, anchor = _setup()
+    dense = _engine(api, anchor, params)
+    ref = _reqs(cfg, 6, max_new=6, seed=7)
+    dense.generate(ref, fmt_override="mxint8")
+
+    # per request: pages for 8 prompt tokens + first write (2) + decode
+    # growth to position 13 (<16) -> 2 pages; pool = 2 slots * 2 + scratch
+    eng = _engine(api, anchor, params, kv_layout="paged", kv_page_size=PS,
+                  kv_num_pages=5)
+    reqs = _reqs(cfg, 6, max_new=6, seed=7)
+    eng.generate(reqs, fmt_override="mxint8")
+    assert all(r.done for r in reqs)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+    st = eng.stats
+    assert st["kv_pages_alloc"] == st["kv_pages_freed"] == 12  # 6 reqs x 2
+    assert st["kv_pages_alloc"] > st["kv_total_pages"] - 1     # reuse proven
+    assert st["kv_pages_hwm"] <= st["kv_total_pages"] - 1
+
+
+def test_non_divisible_prompt_len_vs_page_size():
+    """Regression: prompt_len % page_size != 0 (unbucketed, so the raw length
+    reaches the page math) pads the final page and stays token-identical."""
+    cfg, api, params, anchor = _setup()
+    streams = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(api, anchor, params, kv_layout=layout, kv_page_size=PS,
+                      bucket_prompts=False)
+        reqs = _reqs(cfg, 2, max_new=5, plen=13, seed=5)   # 13 % 8 != 0
+        eng.generate(reqs, fmt_override="mxint8")
+        streams[layout] = [r.out_tokens for r in reqs]
+    assert streams["dense"] == streams["paged"]
+
+
+def test_prefill_slot_writes_only_mapped_pages():
+    """ModelApi.prefill_slot under the paged layout scatters into exactly the
+    pages the slot's block-table row maps — other slots' pages stay zero."""
+    cfg, api, params, anchor = _setup()
+    cache = api.init_cache(2, 32, kv_layout="paged", page_size=PS)
+    n_pages = cache["blocks"][0]["k_pages"].shape[1]
+    assert n_pages == 2 * 4 + 1            # slots * pages_per_slot + scratch
+    bt = np.zeros((2, 4), np.int32)
+    bt[0, :2] = [1, 2]
+    bt[1, :2] = [5, 6]
+    cache["block_table"] = jnp.asarray(bt)
+    toks = jnp.asarray(np.random.default_rng(0)
+                       .integers(0, cfg.vocab, (1, 9)), jnp.int32)
+    _, filled, clen = jax.jit(api.prefill_slot)(
+        params, {"tokens": toks}, cache, 0)
+    assert int(clen) == 9
+    pool = np.asarray(filled["blocks"][0]["k_pages"])
+    assert np.abs(pool[:, 1:3]).sum() > 0          # slot 0's pages written
+    assert np.abs(pool[:, 3:]).sum() == 0          # slot 1 + spares untouched
+    assert np.abs(pool[:, 0]).sum() == 0           # scratch untouched
+
+
+def test_paged_rejects_recurrent_families():
+    """Recurrent state has no sequence axis to page — constructing a paged
+    engine (or cache) for such a family must fail loudly."""
+    cfg = get_reduced("rwkv6-7b")
+    api = get_model(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    anchor = make_anchor(params, QAT)
+    with pytest.raises(ValueError, match="pure-attention"):
+        ElasticEngine(api, anchor, batch_slots=2, max_len=32,
+                      param_template=params, kv_layout="paged")
+    with pytest.raises(ValueError, match="pure-attention"):
+        api.init_cache(2, 32, kv_layout="paged")

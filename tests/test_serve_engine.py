@@ -40,6 +40,7 @@ def test_generate_batched_requests():
     assert eng.stats["formats_cached"] == ["mxint8"]
 
 
+@pytest.mark.slow
 def test_stats_report_packed_containers():
     """The serving tree really is packed: MXTensor at 8 bits, nibble-packed
     PackedInt4Leaf at 4 bits, and the byte footprint orders 4 < 8 < bf16."""
@@ -89,6 +90,7 @@ def test_fused_kernel_serving_matches_densify(fmt):
     assert streams[True] == streams[False]
 
 
+@pytest.mark.slow
 def test_sampling_per_slot_streams_and_determinism():
     """Regression for the correlated-sampling bug: two identical prompts
     admitted in one wave must draw from independent per-slot streams (the
@@ -109,6 +111,7 @@ def test_sampling_per_slot_streams_and_determinism():
     assert a != c                # engine seed matters
 
 
+@pytest.mark.slow
 def test_top_p_collapse_equals_greedy():
     """top_p -> 0 keeps only the argmax token: sampled == greedy stream
     (checks the nucleus mask keeps exactly the top-1 prefix)."""
@@ -123,6 +126,7 @@ def test_top_p_collapse_equals_greedy():
     assert sampled == [r.out_tokens for r in reqs2]
 
 
+@pytest.mark.slow
 def test_prefill_length_bucketing_caps_compiles():
     """Mixed prompt lengths within one power-of-two bucket share a single
     prefill executable, and exact masking keeps greedy tokens identical to
@@ -143,6 +147,7 @@ def test_prefill_length_bucketing_caps_compiles():
     assert [r.out_tokens for r in reqs] == [r.out_tokens for r in reqs2]
 
 
+@pytest.mark.slow
 def test_staggered_arrivals_finish_independently():
     """Requests with different lengths retire per slot; a later arrival is
     admitted into the freed slot WITHOUT re-prefilling the active one (the
@@ -162,6 +167,7 @@ def test_staggered_arrivals_finish_independently():
     assert reqs[0].out_tokens == solo.out_tokens
 
 
+@pytest.mark.slow
 def test_format_pinned_for_batch_lifetime():
     """Regression: the policy may want to switch formats as the queue drains,
     but numerics never change mid-sequence — every request admitted while the
@@ -186,6 +192,7 @@ def test_format_pinned_for_batch_lifetime():
     assert late[0].fmt_used == "mxint8"
 
 
+@pytest.mark.slow
 def test_format_switch_via_policy():
     cfg, api, params, eng = _engine()
     eng.policy = FormatPolicy(anchor="mxint8",
@@ -216,6 +223,7 @@ def test_ss_weights_match_direct_ptq():
                                rtol=0, atol=0)
 
 
+@pytest.mark.slow
 def test_greedy_output_consistency_high_precision():
     """mxint8-served greedy tokens ≈ fp-served greedy tokens (most match)."""
     cfg, api, params, eng = _engine(max_len=64)
