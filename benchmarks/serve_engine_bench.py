@@ -1,4 +1,5 @@
-"""Engine-level serving benchmark: fused-kernel vs densify-inside-jit.
+"""Engine-level serving benchmark: fused-kernel vs densify-inside-jit,
+dense vs paged KV, and monolithic vs chunked prefill admission.
 
 Runs the packed-weight continuous-batching ElasticEngine at dense bf16,
 mxint8 (MXTensor codes) and mxint4 (split-N nibble-packed) under BOTH
@@ -20,11 +21,23 @@ the XLA densify-inside-jit fallback (``densify``) — and reports one table:
     to the workload's live-token demand — the measured (not asserted) memory
     win of block-table paging. Token streams are bit-identical across
     layouts, so the kv rows differ ONLY in this column and wall time.
+  - ttft_p50_ms / ttft_p99_ms / stall_p99_ms / max_pf_tok: the admission
+    latency columns. The workload mixes short prompts with long ones
+    (every ``--long-every``-th request is ``--long-len`` tokens), and the
+    engine's per-tick trace records how much prefill work shared a tick
+    with decoding. Monolithic admission stalls every running slot for a
+    whole prompt (max_pf_tok ~ the long bucket; stall_p99 ~ a full
+    prefill); chunked admission (``prefill_chunk``) bounds per-tick prefill
+    work to one chunk, so the decode-stall tail collapses while token
+    streams stay BIT-IDENTICAL — the bench verifies that identity and
+    prints it.
 
 CPU wall-clock is reported for completeness but is NOT the serving claim —
 off-TPU the fused path runs the Pallas interpreter (slow, correctness-only)
 and the dequant is not the bottleneck; the bytes column is the modeled
-HBM-bound behavior the TPU kernels realize.
+HBM-bound behavior the TPU kernels realize. The *relative* stall/TTFT tail
+between admission modes, however, is a scheduling property and survives the
+interpreter overhead.
 """
 import argparse
 import sys
@@ -43,43 +56,64 @@ from repro.serve.engine import ElasticEngine, Request  # noqa: E402
 
 FORMATS = ("bf16", "mxint8", "mxint4")
 PROMPT_LEN = 8
+WARMUP = 2               # first short + first long request: compiles every
+#                          prefill bucket / chunk executable before timing
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else 0.0
 
 
 def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
-               n_requests, max_new, vocab, kv_layout="dense", page_size=8):
+               n_requests, max_new, vocab, kv_layout="dense", page_size=8,
+               admission="monolithic", prefill_chunk=8, long_every=3,
+               long_len=40):
     kv_kw = {}
     if kv_layout == "paged":
-        # Size the pool to the workload's live-token demand (prompt +
-        # generated tokens per slot), NOT to slots*max_len — that sizing
+        # Size the pool to the workload's live-token demand (longest prompt
+        # + generated tokens per slot), NOT to slots*max_len — that sizing
         # freedom is the whole point of paging.
-        per_slot = -(-(PROMPT_LEN + max_new) // page_size)
+        per_slot = -(-(long_len + max_new) // page_size)
         kv_kw = dict(kv_layout="paged", kv_page_size=page_size,
                      kv_num_pages=slots * per_slot + 1)
-    eng = ElasticEngine(api, anchor, batch_slots=slots, max_len=max_len,
-                        param_template=params, fused=fused, **kv_kw)
+    eng = ElasticEngine(
+        api, anchor, batch_slots=slots, max_len=max_len,
+        param_template=params, fused=fused,
+        prefill_chunk=prefill_chunk if admission == "chunked" else None,
+        **kv_kw)
     rng = np.random.default_rng(0)
+    # every long_every-th request is long (long_every=1 => all long); the
+    # offset keeps one long prompt inside the warmup window so its bucket /
+    # chunk executables compile before timing starts
+    is_long = lambda i: i % long_every == 1 % long_every
     reqs = [Request(rid=i,
-                    prompt=rng.integers(0, vocab, PROMPT_LEN)
+                    prompt=rng.integers(
+                        0, vocab,
+                        long_len if is_long(i) else PROMPT_LEN)
                     .astype(np.int32),
                     max_new=max_new) for i in range(n_requests)]
-    eng.generate(reqs[:1], fmt_override=fmt)    # warmup: compile + SS pass
+    eng.generate(reqs[:WARMUP], fmt_override=fmt)  # warmup: compile + SS
     t0 = time.perf_counter()
     ticks0, toks0 = eng.stats["ticks"], eng.stats["tokens_out"]
-    eng.generate(reqs[1:], fmt_override=fmt)
+    eng.generate(reqs[WARMUP:], fmt_override=fmt)
     dt = time.perf_counter() - t0
     st = eng.stats
     ticks = st["ticks"] - ticks0
     # decode tokens only: each admission also samples one token from its
     # prefill logits, which costs no decode tick — excluding them keeps
     # tokens/tick <= batch_slots and bytes/token an honest roofline term
-    toks = st["tokens_out"] - toks0 - (len(reqs) - 1)
+    toks = st["tokens_out"] - toks0 - (len(reqs) - WARMUP)
     wbytes = st["weight_bytes"][fmt]
     tpt = toks / max(ticks, 1)
+    ttfts = [r.ttft_s for r in reqs[WARMUP:]]
+    stalls = [t["wall_s"] for t in eng.tick_trace if t["decode"]]
     return {
         "fmt": fmt,
         "path": ("fused" if fused else "densify") if fmt != "bf16"
                 else "dense",
         "kv": kv_layout,
+        "admission": admission,
         "containers": "+".join(st["containers"][fmt]),
         "weight_bytes": wbytes,
         "ticks": ticks,
@@ -87,7 +121,13 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
         "tokens_per_tick": tpt,
         "weight_bytes_per_token": wbytes / max(tpt, 1e-9),
         "kv_bytes_per_slot": st["kv_bytes_per_slot"],
+        "ttft_p50_ms": _pct(ttfts, 0.50) * 1e3,
+        "ttft_p99_ms": _pct(ttfts, 0.99) * 1e3,
+        "stall_p99_ms": _pct(stalls, 0.99) * 1e3,
+        "max_pf_tok": max((t["prefill_tokens"] for t in eng.tick_trace),
+                          default=0),
         "wall_s": dt,
+        "streams": [list(r.out_tokens) for r in reqs],
     }
 
 
@@ -106,6 +146,16 @@ def main():
                     help="KV-cache layout(s) to benchmark")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per KV page for the paged layout")
+    ap.add_argument("--admission", default="both",
+                    choices=("both", "monolithic", "chunked"),
+                    help="prompt admission mode(s) to benchmark")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunk size for the chunked admission rows "
+                         "(default: one KV page, min 8)")
+    ap.add_argument("--long-every", type=int, default=3,
+                    help="every Nth request gets the long prompt")
+    ap.add_argument("--long-len", type=int, default=40,
+                    help="long-prompt length (the admission-stall driver)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -115,44 +165,78 @@ def main():
                     block_size=32)
     anchor = make_anchor(params, qat, get_format("mxint8", 32))
 
+    # default chunk: one KV page (floored at the minimum prefill bucket) so
+    # the chunked rows satisfy the page-alignment rule for any --page-size
+    chunk = args.prefill_chunk or max(args.page_size, 8)
     kw = dict(slots=args.slots, max_len=args.max_len,
               n_requests=args.requests, max_new=args.max_new,
-              vocab=cfg.vocab, page_size=args.page_size)
+              vocab=cfg.vocab, page_size=args.page_size,
+              prefill_chunk=chunk,
+              long_every=args.long_every, long_len=args.long_len)
     want_fused = args.paths in ("both", "fused")
     want_dense = args.paths in ("both", "densify")
     layouts = ("dense", "paged") if args.kv == "both" else (args.kv,)
+    admissions = ("monolithic", "chunked") if args.admission == "both" \
+        else (args.admission,)
     rows = []
-    for kv in layouts:
-        for fmt in FORMATS:
-            if fmt == "bf16":  # dense pseudo-format: one path, no packing
-                rows.append(bench_path(api, anchor, params, fmt, False,
-                                       kv_layout=kv, **kw))
-                continue
-            if want_fused:
-                rows.append(bench_path(api, anchor, params, fmt, True,
-                                       kv_layout=kv, **kw))
-            if want_dense:
-                rows.append(bench_path(api, anchor, params, fmt, False,
-                                       kv_layout=kv, **kw))
+    for adm in admissions:
+        for kv in layouts:
+            for fmt in FORMATS:
+                if fmt == "bf16":  # dense pseudo-format: one path
+                    rows.append(bench_path(api, anchor, params, fmt, False,
+                                           kv_layout=kv, admission=adm,
+                                           **kw))
+                    continue
+                if want_fused:
+                    rows.append(bench_path(api, anchor, params, fmt, True,
+                                           kv_layout=kv, admission=adm,
+                                           **kw))
+                if want_dense:
+                    rows.append(bench_path(api, anchor, params, fmt, False,
+                                           kv_layout=kv, admission=adm,
+                                           **kw))
 
     base = next(r for r in rows if r["fmt"] == "bf16")
     # KV ratios are vs the DENSE layout; without a dense row (--kv paged)
     # there is no baseline to compare against, so print n/a rather than a
     # misleading same-layout 1.00x.
     kv_base = next((r for r in rows if r["kv"] == "dense"), None)
-    print("fmt,path,kv,containers,weight_bytes,ticks,tokens,tokens_per_tick,"
-          "weight_bytes_per_token,bytes_cut_vs_bf16,kv_bytes_per_slot,"
-          "kv_cut_vs_dense,wall_s")
+    print("fmt,path,kv,admission,containers,weight_bytes,ticks,tokens,"
+          "tokens_per_tick,weight_bytes_per_token,bytes_cut_vs_bf16,"
+          "kv_bytes_per_slot,kv_cut_vs_dense,ttft_p50_ms,ttft_p99_ms,"
+          "stall_p99_ms,max_pf_tok,wall_s")
     for r in rows:
         cut = base["weight_bytes_per_token"] / r["weight_bytes_per_token"]
         kv_cut = "n/a" if kv_base is None else \
             f"{kv_base['kv_bytes_per_slot'] / max(r['kv_bytes_per_slot'], 1):.2f}x"
-        print(f"{r['fmt']},{r['path']},{r['kv']},{r['containers']},"
+        print(f"{r['fmt']},{r['path']},{r['kv']},{r['admission']},"
+              f"{r['containers']},"
               f"{r['weight_bytes']},{r['ticks']},{r['tokens']},"
               f"{r['tokens_per_tick']:.2f},"
               f"{r['weight_bytes_per_token']:.0f},{cut:.2f}x,"
               f"{r['kv_bytes_per_slot']},{kv_cut},"
+              f"{r['ttft_p50_ms']:.1f},{r['ttft_p99_ms']:.1f},"
+              f"{r['stall_p99_ms']:.1f},{r['max_pf_tok']},"
               f"{r['wall_s']:.2f}")
+
+    if len(admissions) == 2:
+        # The chunked-admission contract: same tokens, smaller stall tail.
+        keyed = {}
+        for r in rows:
+            keyed.setdefault((r["fmt"], r["path"], r["kv"]),
+                             {})[r["admission"]] = r
+        identical = all(p["monolithic"]["streams"] == p["chunked"]["streams"]
+                        for p in keyed.values() if len(p) == 2)
+        pairs = [p for p in keyed.values() if len(p) == 2]
+        mono_stall = _pct([p["monolithic"]["stall_p99_ms"] for p in pairs],
+                          0.5)
+        chnk_stall = _pct([p["chunked"]["stall_p99_ms"] for p in pairs], 0.5)
+        print(f"# chunked vs monolithic: token streams identical across all "
+              f"configs = {identical}; median stall_p99 "
+              f"{mono_stall:.1f}ms -> {chnk_stall:.1f}ms")
+        if not identical:
+            raise SystemExit("token streams diverged between admission "
+                             "modes — chunked prefill broke bit-identity")
 
 
 if __name__ == "__main__":

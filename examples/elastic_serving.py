@@ -17,7 +17,14 @@ The engine runs with the paged KV cache (kv_layout="paged"): KV HBM is
 committed one page at a time as sequences grow and recycled the moment a
 request retires, instead of preallocating max_len per slot — token streams
 are identical to the dense layout (see docs/serving_internals.md §5).
+
+With --prefill-chunk N, admission is *chunked* (docs/serving_internals.md
+§6): long prompts stream in N-token chunks interleaved with decode ticks —
+at most one chunk of prefill per tick — so running slots' inter-token
+latency stays bounded while a long prompt admits. Token streams are
+bit-identical either way.
 """
+import argparse
 import sys
 
 import jax
@@ -34,7 +41,15 @@ from repro.serve.policy import FormatPolicy  # noqa: E402
 
 
 def main():
-    cfg = get_reduced("qwen3-4b")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked admission: tokens per prefill chunk "
+                         "(multiple of the 8-token page size); default "
+                         "monolithic")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
     api = get_model(cfg, None)
     params = api.init_params(jax.random.PRNGKey(0))
     qat = QATConfig(formats=("mxint4", "mxint8"), anchor="mxint8",
@@ -45,14 +60,38 @@ def main():
                           ladder=((12, "mxint4"), (6, "mxint6"),
                                   (0, "mxint8")),
                           hysteresis=1)
+    chunked = args.prefill_chunk is not None
     eng = ElasticEngine(api, anchor, batch_slots=4, max_len=64,
                         policy=policy, param_template=params,
                         kv_layout="paged", kv_page_size=8,
-                        kv_num_pages=4 * 3 + 1)   # live-token sized, not
-    #                                               slots*max_len — pages
-    #                                               recycle across the burst
+                        prefill_chunk=args.prefill_chunk,
+                        kv_num_pages=4 * (7 if chunked else 3) + 1)
+    #   pool is live-token sized, not slots*max_len — pages recycle across
+    #   the burst (the chunked demo's long prompts need more live pages)
 
     rng = np.random.default_rng(0)
+
+    if chunked:
+        print(f"CHUNKED ADMISSION: short requests admit first and keep "
+              f"decoding while a 41-token prompt trickles in "
+              f"{args.prefill_chunk}-token chunks behind them")
+        reqs = [Request(rid=200 + i, prompt=rng.integers(0, cfg.vocab, 8)
+                        .astype(np.int32), max_new=10) for i in range(3)] + \
+               [Request(rid=203, prompt=rng.integers(0, cfg.vocab, 41)
+                        .astype(np.int32), max_new=4)]
+        eng.generate(reqs)
+        tt = eng.tick_trace
+        print(f"  {len(tt)} scheduler ticks, max prefill tokens in any "
+              f"tick: {max(t['prefill_tokens'] for t in tt)} "
+              f"(chunk={args.prefill_chunk}; monolithic admission would "
+              "run all 63 — the capped length bucket — in one tick)")
+        stalled = sum(1 for t in tt if t["decode"] and t["prefill_tokens"])
+        print(f"  {stalled} ticks interleaved a prefill chunk with the "
+              "running slots' decode step")
+        for r in reqs:
+            print(f"  req {r.rid}: plen={r.prompt.size} ttft={r.ttft_s:.3f}s"
+                  f" n_out={len(r.out_tokens)}")
+        print()
     print("LOW LOAD: 3 requests")
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8)
                     .astype(np.int32), max_new=6) for i in range(3)]

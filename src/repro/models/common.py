@@ -215,6 +215,19 @@ def single_slot_cache(cache, batch_axis: int = CACHE_BATCH_AXIS):
         cache)
 
 
+def slice_cache_slot(cache, slot, batch_axis: int = CACHE_BATCH_AXIS):
+    """Slice slot ``slot`` of a batched cache out as a batch-1 cache pytree.
+
+    The read half of the read-modify-write a chunked prefill needs on the
+    dense KV layout: unlike ``single_slot_cache`` (a zeroed scratch), the
+    slice carries the slot's already-written KV so a later chunk can attend
+    over earlier chunks.
+    """
+    return jax.tree_util.tree_map(
+        lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=batch_axis),
+        cache)
+
+
 def insert_cache_slot(cache, single, slot, batch_axis: int = CACHE_BATCH_AXIS):
     """Write a batch-1 cache pytree into slot ``slot`` of a batched cache.
 
@@ -249,6 +262,31 @@ def make_prefill_slot(prefill):
         logits, filled, clen = prefill(params, batch, small)
         return logits[0], insert_cache_slot(cache, filled, slot), clen[0]
     return prefill_slot
+
+
+def make_prefill_chunk_slot(prefill_chunk):
+    """Derive a single-slot chunked prefill from a batched ``prefill_chunk``.
+
+    Like ``make_prefill_slot`` but for one prompt *chunk* at cursor
+    ``start_pos`` (chunked admission — docs/serving_internals.md "Admission
+    & scheduling"). Paged KV: the chunk writes straight through the slot's
+    block-table row, which is the isolation. Dense KV: the slot's cache row
+    is sliced out (NOT a zeroed scratch — chunk N must see chunks
+    0..N-1's KV), run through, and written back. Returns
+    ``(logits (V,), new_cache, new_len scalar)``.
+    """
+    def prefill_chunk_slot(params, batch, cache, slot, start_pos):
+        if is_paged_cache(cache):
+            row = jax.lax.dynamic_slice_in_dim(cache["block_table"], slot, 1,
+                                               axis=0)
+            logits, filled, clen = prefill_chunk(
+                params, batch, dict(cache, block_table=row), start_pos)
+            return (logits[0],
+                    dict(filled, block_table=cache["block_table"]), clen[0])
+        small = slice_cache_slot(cache, slot)
+        logits, filled, clen = prefill_chunk(params, batch, small, start_pos)
+        return logits[0], insert_cache_slot(cache, filled, slot), clen[0]
+    return prefill_chunk_slot
 
 
 # =============================================================================

@@ -181,7 +181,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 def paged_prefill_update(pool: jax.Array, kv_new: jax.Array,
-                         block_table: jax.Array) -> jax.Array:
+                         block_table: jax.Array,
+                         start_pos=0) -> jax.Array:
     """Scatter prefill K/V (B, S, Hkv, D) into the pages each row maps.
 
     S is zero-padded up to a whole number of pages (matching the dense
@@ -189,6 +190,12 @@ def paged_prefill_update(pool: jax.Array, kv_new: jax.Array,
     pages are disjoint by construction (the engine allocates each physical
     page to at most one slot), so the batched scatter never collides —
     except on the scratch page 0, where last-write-wins is harmless.
+
+    ``start_pos`` (scalar, may be traced) is the logical position of the
+    first written token — chunked prefill resumes at its cursor. It must be
+    page-aligned (the engine aligns chunk boundaries to pages by
+    construction), so the write covers pages
+    ``start_pos // page_size .. + ceil(S/page_size)``.
     """
     b, s, hkv, d = kv_new.shape
     ps = pool.shape[1]
@@ -197,7 +204,8 @@ def paged_prefill_update(pool: jax.Array, kv_new: jax.Array,
     if pad:
         kv_new = jnp.pad(kv_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
     vals = kv_new.astype(pool.dtype).reshape(b * n_p, ps, hkv, d)
-    ids = jax.lax.slice_in_dim(block_table, 0, n_p, axis=1).reshape(-1)
+    ids = jax.lax.dynamic_slice_in_dim(block_table, start_pos // ps, n_p,
+                                       axis=1).reshape(-1)
     return pool.at[ids].set(vals)
 
 
@@ -237,7 +245,8 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
                     cache_len: Optional[jax.Array] = None,
                     cross_kv: Optional[Tuple] = None,
                     causal: bool = True,
-                    block_table: Optional[jax.Array] = None):
+                    block_table: Optional[jax.Array] = None,
+                    chunk_start: Optional[jax.Array] = None):
     """Self- (or cross-) attention. Returns (out, new_kv) where new_kv is the
     (k, v) tensors produced at this layer (for cache building) or the updated
     cache in decode mode.
@@ -245,7 +254,16 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
     With ``block_table`` set, ``kv_cache`` holds paged pools
     (num_pages, page_size, Hkv, D): the new token is appended through the
     block-table indirection and attention gathers the slot's pages back into
-    logical order before the same masked single-query softmax."""
+    logical order before the same masked single-query softmax.
+
+    With ``chunk_start`` set (chunked prefill; see docs/serving_internals.md
+    "Admission & scheduling"), ``x`` is one prompt *chunk* whose first token
+    sits at logical position ``chunk_start``: the chunk's K/V are written
+    into ``kv_cache`` at that offset and its queries run flash attention
+    over the whole cache with ``q_offset=chunk_start`` — the causal mask
+    exposes exactly positions ``< chunk_start + S`` (everything this
+    request's earlier chunks wrote, plus the chunk itself; stale data from a
+    slot's previous occupant only ever sits at higher positions)."""
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
@@ -267,7 +285,29 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
         q = ctx.dense(x, p["wq"], name + ".wq").reshape(b, s, h, hd)
         k, v = cross_kv
 
-    if kv_cache is not None and block_table is not None:
+    if kv_cache is not None and chunk_start is not None:
+        # chunked prefill: write this chunk's K/V at the cursor, then attend
+        # the chunk's queries over the cache (same flash kernel as monolithic
+        # prefill — q_offset shifts the causal mask to the cursor).
+        kc, vc = kv_cache
+        if block_table is not None:
+            kc = paged_prefill_update(kc, k, block_table,
+                                      start_pos=chunk_start)
+            vc = paged_prefill_update(vc, v, block_table,
+                                      start_pos=chunk_start)
+            k_view = paged_gather(kc, block_table)
+            v_view = paged_gather(vc, block_table)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(kc.dtype), chunk_start, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(vc.dtype), chunk_start, axis=1)
+            k_view, v_view = kc, vc
+        out = flash_attention(q, k_view, v_view, causal=True,
+                              window=cfg.sliding_window,
+                              q_offset=chunk_start, chunk=cfg.seq_chunk)
+        new_kv = (kc, vc)
+    elif kv_cache is not None and block_table is not None:
         # paged decode: append through the block table, gather the slot's
         # pages back into logical order, attend with the same length mask.
         kc, vc = kv_cache

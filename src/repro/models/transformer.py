@@ -24,7 +24,8 @@ from repro.core.qat import QATConfig
 from repro.models import layers as L
 from repro.models import rwkv as R
 from repro.models import ssm as S
-from repro.models.common import (ModelConfig, QuantCtx, make_prefill_slot,
+from repro.models.common import (ModelConfig, QuantCtx,
+                                 make_prefill_chunk_slot, make_prefill_slot,
                                  stacked_init, trunc_normal)
 from repro.sharding.rules import shard_act
 
@@ -203,30 +204,48 @@ def param_axes(cfg: ModelConfig) -> Dict:
 # Forward
 # =============================================================================
 def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
-           cache_slice, cache_len, prefill: bool, block_table=None):
+           cache_slice, cache_len, prefill: bool, block_table=None,
+           chunk_start=None):
     """One block. Returns (x, new_cache_slice).
 
     ``block_table`` (B, max_pages) selects the paged KV layout: attention
     cache slices hold page pools (``k_pages``/``v_pages``) instead of
     per-slot contiguous buffers, and all reads/writes go through the
     block-table indirection (see layers.py paged helpers).
+
+    ``chunk_start`` (scalar, may be traced; implies ``prefill=True``)
+    selects chunked prefill: ``x`` is one prompt chunk whose first token
+    sits at that logical position, K/V are written at the cursor, and
+    attention reads back the cache so the chunk sees every earlier chunk.
+    Attention-only — recurrent mixers fold the prompt into their state in
+    one pass and cannot resume mid-prompt, so they reject loudly.
     """
     mk, fk = mixer_kind(cfg, j), ffn_kind(cfg, j)
     name = f"blk{j}.{mk}"
+    chunked = prefill and chunk_start is not None and cache_slice is not None
+    if chunked and mk != "attn":
+        raise ValueError(
+            f"chunked prefill requires attention mixers; layer {j} of "
+            f"family {cfg.family!r} is {mk!r} (its recurrent state cannot "
+            "resume mid-prompt) — use monolithic admission")
     new_cache: Dict[str, Any] = {}
     h = L.rms_norm(x, p["mixer_norm"], cfg.norm_eps)
     if mk == "attn":
         paged = cache_slice is not None and "k_pages" in cache_slice
         kv = None
-        if cache_slice is not None and not prefill:
+        if cache_slice is not None and (chunked or not prefill):
             kv = (cache_slice["k_pages"], cache_slice["v_pages"]) if paged \
                 else (cache_slice["k"], cache_slice["v"])
         out, new_kv = L.attention_block(
             ctx, h, p["attn"], cfg, positions, name,
             kv_cache=kv, cache_len=cache_len,
-            block_table=block_table if paged else None)
+            block_table=block_table if paged else None,
+            chunk_start=chunk_start if chunked else None)
         if cache_slice is not None:
-            if prefill and paged:
+            if chunked:
+                new_cache = {"k_pages": new_kv[0], "v_pages": new_kv[1]} \
+                    if paged else {"k": new_kv[0], "v": new_kv[1]}
+            elif prefill and paged:
                 k_new, v_new = new_kv
                 new_cache = {
                     "k_pages": L.paged_prefill_update(
@@ -284,7 +303,8 @@ def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
 
 
 def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
-                   cache=None, cache_len=None, prefill: bool = False):
+                   cache=None, cache_len=None, prefill: bool = False,
+                   chunk_start=None):
     """Run the block stack. x (B,S,d). Returns (hidden, new_cache, aux)."""
     # Sequence-parallel residual: the per-group saved activation (the scan
     # carry, which dominates train memory at depth) shards its seq dim over
@@ -305,7 +325,7 @@ def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
 
             def layer_call(xv_, p_, cs_, _j=j):
                 return _layer(ctx, xv_, p_, cfg, _j, positions, cs_,
-                              cache_len, prefill, block_table)
+                              cache_len, prefill, block_table, chunk_start)
 
             if cfg.remat_inner and cfg.scan_group > 1:
                 layer_call = jax.checkpoint(
@@ -440,6 +460,13 @@ class ModelApi:
     #                                -> (logits (V,), cache, len scalar);
     #                                single-request prefill-insert: fills one
     #                                slot without touching the others
+    prefill_chunk: Callable = None  # (params, batch(B,C), cache, start_pos)
+    #                                -> (logits, cache, len): one prompt
+    #                                chunk at cursor start_pos (chunked
+    #                                admission; attention families only)
+    prefill_chunk_slot: Callable = None  # single-slot prefill_chunk:
+    #                                (params, batch(1,C), cache, slot,
+    #                                start_pos) -> (logits (V,), cache, len)
     with_qmm: Callable = None      # (qmm) -> ModelApi whose serving entry
     #                                points route packed weight leaves
     #                                through the fused dequant-GEMM hook
@@ -612,6 +639,42 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
             logits = _head_logits(ctx, params, cfg, h_last)
             return logits, new_cache, cache_len
 
+        def prefill_chunk(params, batch, cache, start_pos):
+            """One prompt chunk at cursor ``start_pos`` (chunked admission).
+
+            ``batch["tokens"]`` (B, C) is the prompt slice
+            ``[start_pos, start_pos + C)`` (the final chunk may be
+            right-padded); ``batch["lengths"]`` (B,) is the TRUE TOTAL
+            prompt length. K/V land in the cache at the cursor and the
+            chunk's queries attend over everything written so far, so
+            running the chunks in order is bit-identical to monolithic
+            ``prefill`` (see docs/serving_internals.md "Admission &
+            scheduling"). Returns ``(logits, cache, new_len)`` with
+            ``new_len = min(lengths, start_pos + C)`` — on the final chunk
+            that is the true prompt length and ``logits`` is read at the
+            last real token (earlier chunks' logits are discarded by the
+            engine).
+            """
+            if cfg.vision_tokens > 0:
+                raise ValueError(
+                    "chunked prefill does not support prepended vision "
+                    "embeds; use monolithic admission")
+            ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
+            tokens = batch["tokens"]
+            b, c = tokens.shape
+            x = _embed(params, cfg, tokens)
+            start = jnp.asarray(start_pos, jnp.int32)
+            positions = start + jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+            hidden, new_cache, _ = forward_hidden(
+                ctx, params, cfg, x, positions, cache=cache,
+                cache_len=jnp.zeros((b,), jnp.int32), prefill=True,
+                chunk_start=start)
+            new_len = jnp.minimum(batch["lengths"].astype(jnp.int32),
+                                  start + c)
+            h_last = _last_hidden(hidden, new_len - start)
+            logits = _head_logits(ctx, params, cfg, h_last)
+            return logits, new_cache, new_len
+
         def serve_step(params, batch, cache, cache_len):
             """One decode step: batch['tokens'] (B,1) against the cache."""
             ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
@@ -626,14 +689,16 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
             logits = shard_act(logits, ("batch", "vocab"))
             return logits, new_cache
 
-        return prefill, serve_step
+        return prefill, serve_step, prefill_chunk
 
-    prefill, serve_step = _serving_fns(None)
+    prefill, serve_step, prefill_chunk = _serving_fns(None)
 
     def with_qmm(qmm):
-        p, s = _serving_fns(qmm)
-        return dataclasses.replace(api, prefill=p, serve_step=s,
-                                   prefill_slot=make_prefill_slot(p))
+        p, s, pc = _serving_fns(qmm)
+        return dataclasses.replace(
+            api, prefill=p, serve_step=s, prefill_slot=make_prefill_slot(p),
+            prefill_chunk=pc,
+            prefill_chunk_slot=make_prefill_chunk_slot(pc))
 
     api = ModelApi(
         cfg=cfg, qat=qat,
@@ -645,6 +710,8 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         prefill=prefill,
         serve_step=serve_step,
         prefill_slot=make_prefill_slot(prefill),
+        prefill_chunk=prefill_chunk,
+        prefill_chunk_slot=make_prefill_chunk_slot(prefill_chunk),
         with_qmm=with_qmm,
     )
     return api

@@ -21,17 +21,22 @@ token streams are identical across them. Deriving a new format costs one
 packed-domain Slice-and-Scale pass and is cached; switching between cached
 formats is free.
 
-Slot lifecycle (continuous batching):
+Slot lifecycle (continuous batching; state machine documented in
+docs/serving_internals.md "Admission & scheduling"):
 
   admit   — each request is prefilled individually via
             ``ModelApi.prefill_slot`` into a free slot; active slots are
             never re-prefilled. Prompts are right-padded to power-of-two
             length buckets (exact masking via ``batch["lengths"]``), so the
             prefill executable compiles once per bucket, not once per
-            prompt length.
-  decode  — one fused serve_step advances every slot per tick; free/finished
-            slots are masked (their cache_len stops advancing and their
-            sampled tokens are dropped).
+            prompt length. With ``prefill_chunk`` set, admission is instead
+            *chunked*: the prompt streams in fixed-size chunks via
+            ``ModelApi.prefill_chunk_slot`` (one chunk per tick, cursor in
+            host state), bounding how long a long prompt can stall the
+            running slots.
+  decode  — one fused serve_step advances every slot per tick; free,
+            finished, and mid-prefill slots are masked (their cache_len
+            stops advancing and their sampled tokens are dropped).
   retire  — a slot frees the moment its request reaches ``max_new`` or cache
             capacity, and is re-admissible on the very next tick.
 
@@ -54,6 +59,7 @@ in host counters — no per-slot ``int(...)`` device syncs in the tick loop.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -66,6 +72,7 @@ from repro.core.mx import MXTensor
 from repro.models.transformer import ModelApi
 from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
                                        make_packed_params,
+                                       make_packed_prefill_chunk,
                                        make_packed_prefill_slot,
                                        make_packed_serve_step,
                                        weight_stream_bytes)
@@ -111,6 +118,8 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     fmt_used: Optional[str] = None
     done: bool = False
+    ttft_s: Optional[float] = None  # wall-clock from generate() entry to the
+    #                                 first sampled token (set by the engine)
 
 
 class ElasticEngine:
@@ -138,6 +147,20 @@ class ElasticEngine:
     silent truncation); size the pool with ``kv_num_pages`` (None = dense
     capacity: slots × ceil(max_len/page) + 1 scratch page). Token streams
     are bit-identical across layouts (same values at every valid position).
+
+    ``prefill_chunk`` selects the admission mode (the slot-lifecycle state
+    machine is documented in docs/serving_internals.md, "Admission &
+    scheduling"). ``None`` (default) admits monolithically: each prompt is
+    prefilled in one call, stalling every running slot for the full prompt
+    length. An int (or ``"auto"`` = one KV page when paged, else 64) splits
+    admission into fixed-size chunks interleaved with decode ticks — the
+    scheduler runs AT MOST one prefill chunk per tick before the batched
+    decode step, so per-tick work (and therefore running slots' inter-token
+    latency) is bounded by one chunk regardless of incoming prompt length.
+    Token streams are bit-identical to monolithic admission (greedy and
+    seeded sampling). Attention-only; when paged, the chunk must be a
+    multiple of ``kv_page_size`` so chunk boundaries fall on pages and each
+    chunk's pages are allocated at that chunk, not all upfront.
     """
 
     def __init__(self, api: ModelApi, anchor: AnchorModel, *,
@@ -148,7 +171,8 @@ class ElasticEngine:
                  temperature: float = 1.0, top_p: float = 1.0,
                  bucket_prompts: bool = True,
                  kv_layout: str = "dense", kv_page_size: int = 16,
-                 kv_num_pages: Optional[int] = None):
+                 kv_num_pages: Optional[int] = None,
+                 prefill_chunk=None):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
@@ -181,6 +205,7 @@ class ElasticEngine:
         pure_attn = api.cfg.family not in ("ssm", "encdec") \
             and api.cfg.attn_every <= 0
         self._bucket = bucket_prompts and pure_attn
+        self._pure_attn = pure_attn
         # Paged KV: only attention KV has a sequence axis to page over. The
         # pure-attention check itself lives in the model's init_cache (the
         # single source of truth for what a family can page); the eval_shape
@@ -191,6 +216,29 @@ class ElasticEngine:
         self.kv_layout = kv_layout
         self.kv_page_size = kv_page_size
         self.kv_num_pages = kv_num_pages
+        # Chunked prefill admission (None = monolithic; see class docstring
+        # and docs/serving_internals.md "Admission & scheduling").
+        if prefill_chunk == "auto":
+            prefill_chunk = kv_page_size if kv_layout == "paged" else 64
+        if prefill_chunk is not None:
+            if not pure_attn or api.cfg.vision_tokens > 0:
+                raise ValueError(
+                    "prefill_chunk requires a pure-attention text stack; "
+                    f"family {api.cfg.family!r} folds the prompt into "
+                    "recurrent state (or prepends vision embeds) and cannot "
+                    "resume prefill mid-prompt — use prefill_chunk=None")
+            if prefill_chunk < MIN_PREFILL_BUCKET:
+                raise ValueError(
+                    f"prefill_chunk ({prefill_chunk}) must be >= the "
+                    f"minimum prefill bucket ({MIN_PREFILL_BUCKET})")
+            if kv_layout == "paged" and prefill_chunk % kv_page_size:
+                raise ValueError(
+                    f"prefill_chunk ({prefill_chunk}) must be a multiple of "
+                    f"kv_page_size ({kv_page_size}) so chunk boundaries "
+                    "fall on page boundaries")
+        self.prefill_chunk = prefill_chunk
+        self._admission_requeues = 0
+        self.tick_trace: List[Dict[str, float]] = []   # reset per generate
         self._kv_pages_alloc = 0
         self._kv_pages_freed = 0
         self._kv_pages_hwm = 0
@@ -214,6 +262,16 @@ class ElasticEngine:
         self._packed_prefill_slot = jax.jit(self._counting(
             make_packed_prefill_slot(api, self._block_size,
                                      fused=self.fused)))
+        # Chunked-admission entry points (jit is lazy: nothing compiles
+        # unless prefill_chunk is actually used). Compiles once per chunk
+        # bucket — the cursor is a traced argument.
+        self._dense_prefill_chunk = jax.jit(
+            self._counting(api.prefill_chunk_slot)) \
+            if api.prefill_chunk_slot is not None else None
+        self._packed_prefill_chunk = jax.jit(self._counting(
+            make_packed_prefill_chunk(api, self._block_size,
+                                      fused=self.fused))) \
+            if api.prefill_chunk_slot is not None else None
 
     def _counting(self, fn):
         """Wrap a to-be-jitted fn so traces (= compiles) are counted."""
@@ -287,12 +345,26 @@ class ElasticEngine:
         return self.weights_for(fmt_name)
 
     # ---- admission helpers ------------------------------------------------
+    @property
+    def prompt_capacity(self) -> int:
+        """Longest admissible prompt: ``max_len - 1`` tokens.
+
+        THE single home of this invariant (admission asserts against it,
+        prompt bucketing clamps to it, retire-at-capacity compares
+        ``slot_len`` to it, and the paged block table — sized from
+        ``max_len`` — therefore always covers any bucketed length):
+        the cache holds ``max_len`` positions and the first generated
+        token's KV is written at position ``plen`` before any retire check
+        runs, so one position past the prompt must always exist.
+        """
+        return self.max_len - 1
+
     def _prefill_batch(self, prompt: np.ndarray):
         """Tokens (+ true length when bucketing) for one admission."""
         plen = prompt.size
         if not self._bucket:
             return {"tokens": jnp.asarray(prompt[None])}
-        blen = _bucket_len(plen, self.max_len - 1)
+        blen = _bucket_len(plen, self.prompt_capacity)
         padded = np.zeros(blen, np.int32)
         padded[:plen] = prompt
         return {"tokens": jnp.asarray(padded[None]),
@@ -301,17 +373,33 @@ class ElasticEngine:
     # ---- serving loop -----------------------------------------------------
     def generate(self, requests: List[Request], greedy: bool = True,
                  fmt_override: Optional[str] = None) -> List[Request]:
-        """Serve requests to completion with slot-level continuous batching."""
+        """Serve requests to completion with slot-level continuous batching.
+
+        Slot lifecycle (docs/serving_internals.md "Admission & scheduling"):
+        free -> prefilling(cursor) -> decoding -> retired. With
+        ``prefill_chunk`` set, at most ONE slot is mid-prefill at a time and
+        each scheduler tick runs at most one prefill chunk before the
+        batched decode step; ``tick_trace`` records the per-tick work so
+        that bound is testable, and each ``Request.ttft_s`` is stamped when
+        its first token is sampled.
+        """
         pending = list(requests)
         active: List[Optional[Request]] = [None] * self.slots
         slot_len = [0] * self.slots        # host mirror of cache_len
         b = self.slots
+        t0 = time.perf_counter()
+        self.tick_trace = []
 
         cache = self._init_cache(b)
         cache_len = jnp.zeros((b,), jnp.int32)
         tokens = jnp.zeros((b, 1), jnp.int32)
         pinned: Optional[str] = None       # format for this batch's lifetime
         paged = self.kv_layout == "paged"
+        chunk = self.prefill_chunk         # None => monolithic admission
+        filling: Optional[Request] = None  # the (single) mid-prefill request
+        fill_slot, fill_cursor = -1, 0
+        wait_pages = False  # requeued admission waits for a retire to free
+        #                     pages before trying again (avoids a hot loop)
         if paged:
             ps = self.kv_page_size
             # host-side page bookkeeping: the block table mirror ships to the
@@ -320,7 +408,33 @@ class ElasticEngine:
             free_pages = list(range(self._kv_total_pages - 1, 0, -1))
             bt = np.zeros((b, cache["block_table"].shape[1]), np.int32)
 
-        while pending or any(a is not None for a in active):
+        def complete_admission(i: int, r: Request, logits) -> None:
+            """prefilling -> decoding (or straight to retired): seed the
+            slot's RNG stream, sample the first token from the prefill
+            logits, stamp TTFT. Seeding happens HERE — at prefill
+            completion, right before the first draw — so chunked admission
+            (whose mid-prefill slots see decode ticks advance every slot
+            key) samples the same stream as monolithic."""
+            nonlocal tokens
+            self._slot_keys = self._slot_keys.at[i].set(
+                jax.random.fold_in(self._key, r.rid))
+            first = int(self._sample(logits[None], greedy, slot=i)[0])
+            tokens = tokens.at[i, 0].set(first)
+            r.fmt_used = pinned            # pinned for the whole sequence
+            r.out_tokens.append(first)
+            r.ttft_s = time.perf_counter() - t0
+            self._tokens_out += 1
+            if len(r.out_tokens) >= r.max_new:
+                r.done = True              # degenerate max_new<=1
+                if paged:                  # row -> scratch BEFORE any reuse
+                    self._free_slot_pages(free_pages, bt, i)
+                    cache["block_table"] = jnp.asarray(bt)
+            else:
+                active[i] = r
+
+        while pending or filling is not None \
+                or any(a is not None for a in active):
+            t_tick = time.perf_counter()
             if pinned is None:             # engine drained: re-pick format
                 pinned = fmt_override or self.policy.pick(
                     queue_depth=len(pending), active=0)
@@ -328,49 +442,112 @@ class ElasticEngine:
             use_packed = self._serves_packed(pinned)
             prefill_slot = self._packed_prefill_slot if use_packed \
                 else self._dense_prefill_slot
+            chunk_fn = self._packed_prefill_chunk if use_packed \
+                else self._dense_prefill_chunk
             step = self._packed_step if use_packed else self._dense_step
+            tick_pf_tokens = 0
+            tick_pf_chunks = 0
 
-            # ---- admit: one request per free slot, active slots untouched
-            for i in range(b):
-                if active[i] is not None or not pending:
-                    continue
-                r = pending.pop(0)
-                prompt = np.asarray(r.prompt, np.int32)
-                assert prompt.size < self.max_len - 1, \
-                    f"prompt ({prompt.size}) exceeds cache ({self.max_len})"
-                self._slot_keys = self._slot_keys.at[i].set(
-                    jax.random.fold_in(self._key, r.rid))
-                pbatch = self._prefill_batch(prompt)
-                if paged:
-                    # Pages to hold the (possibly bucket-padded) prompt AND
-                    # the first decode write at position prompt.size.
-                    blen = pbatch["tokens"].shape[1]
-                    need = max(-(-blen // ps), prompt.size // ps + 1)
-                    bt[i, :need] = self._alloc_pages(
-                        free_pages, need, f"admission of rid={r.rid}")
-                    cache["block_table"] = jnp.asarray(bt)
-                logits, cache, new_len = prefill_slot(params, pbatch,
-                                                      cache, i)
-                cache_len = cache_len.at[i].set(new_len)
-                slot_len[i] = prompt.size
-                first = int(self._sample(logits[None], greedy, slot=i)[0])
-                tokens = tokens.at[i, 0].set(first)
-                r.fmt_used = pinned        # pinned for the whole sequence
-                r.out_tokens.append(first)
-                self._tokens_out += 1
-                if len(r.out_tokens) >= r.max_new:
-                    r.done = True          # degenerate max_new<=1
-                    if paged:              # row -> scratch BEFORE any reuse
-                        self._free_slot_pages(free_pages, bt, i)
+            if chunk is None:
+                # ---- monolithic admission: one whole prompt per free slot,
+                # active slots untouched (but stalled for the full prefill)
+                for i in range(b):
+                    if active[i] is not None or not pending:
+                        continue
+                    r = pending.pop(0)
+                    prompt = np.asarray(r.prompt, np.int32)
+                    assert prompt.size <= self.prompt_capacity, \
+                        (f"prompt ({prompt.size}) exceeds capacity "
+                         f"({self.prompt_capacity} = max_len - 1)")
+                    pbatch = self._prefill_batch(prompt)
+                    if paged:
+                        # Pages to hold the (possibly bucket-padded) prompt
+                        # AND the first decode write at position prompt.size.
+                        blen = pbatch["tokens"].shape[1]
+                        need = max(-(-blen // ps), prompt.size // ps + 1)
+                        bt[i, :need] = self._alloc_pages(
+                            free_pages, need, f"admission of rid={r.rid}")
                         cache["block_table"] = jnp.asarray(bt)
-                else:
-                    active[i] = r
+                    logits, cache, new_len = prefill_slot(params, pbatch,
+                                                          cache, i)
+                    tick_pf_tokens += pbatch["tokens"].shape[1]
+                    tick_pf_chunks += 1
+                    cache_len = cache_len.at[i].set(new_len)
+                    slot_len[i] = prompt.size
+                    complete_admission(i, r, logits)
+            else:
+                # ---- chunked admission: at most ONE prefill chunk per tick
+                if filling is None and pending and not wait_pages \
+                        and None in active:
+                    fill_slot = active.index(None)
+                    filling, fill_cursor = pending.pop(0), 0
+                    assert filling.prompt.size <= self.prompt_capacity, \
+                        (f"prompt ({filling.prompt.size}) exceeds capacity "
+                         f"({self.prompt_capacity} = max_len - 1)")
+                if filling is not None:
+                    r, i = filling, fill_slot
+                    prompt = np.asarray(r.prompt, np.int32)
+                    plen = prompt.size
+                    start = fill_cursor
+                    take = min(chunk, plen - start)
+                    final = start + take >= plen
+                    padded = take if (final and not self._bucket) else \
+                        (_bucket_len(take, chunk) if final else chunk)
+                    padded = min(padded, self.max_len - start)
+                    ok = True
+                    if paged:
+                        # This chunk's pages only — chunk N's pages are
+                        # allocated at chunk N, never all upfront. The first
+                        # decode write's page is the decode tick's job.
+                        first_pg = start // ps
+                        last_pg = -(-(start + padded) // ps)
+                        try:
+                            got = self._alloc_pages(
+                                free_pages, last_pg - first_pg,
+                                f"prefill chunk at {start} of rid={r.rid}")
+                        except RuntimeError:
+                            # Partial admission must not starve the pool:
+                            # release the pages already held, requeue, and
+                            # retry once a retire frees pages. With nothing
+                            # running, nothing will ever free — re-raise.
+                            if not any(a is not None for a in active):
+                                raise
+                            self._free_slot_pages(free_pages, bt, i)
+                            cache["block_table"] = jnp.asarray(bt)
+                            pending.insert(0, r)
+                            filling = None
+                            self._admission_requeues += 1
+                            wait_pages = True
+                            ok = False
+                        if ok:
+                            bt[i, first_pg:last_pg] = got
+                            cache["block_table"] = jnp.asarray(bt)
+                    if ok:
+                        ctoks = np.zeros(padded, np.int32)
+                        ctoks[:take] = prompt[start:start + take]
+                        pbatch = {"tokens": jnp.asarray(ctoks[None]),
+                                  "lengths": jnp.asarray([plen], jnp.int32)}
+                        logits, cache, new_len = chunk_fn(params, pbatch,
+                                                          cache, i, start)
+                        tick_pf_tokens += padded
+                        tick_pf_chunks += 1
+                        cache_len = cache_len.at[i].set(new_len)
+                        fill_cursor = start + take
+                        if final:
+                            slot_len[i] = plen
+                            complete_admission(i, r, logits)
+                            filling = None
 
             if all(a is None for a in active):
-                pinned = None              # drained; next wave re-picks
+                self._record_tick(tick_pf_tokens, tick_pf_chunks, 0,
+                                  time.perf_counter() - t_tick)
+                if filling is None:
+                    pinned = None          # drained; next wave re-picks
                 continue
 
-            # ---- decode tick: fused step over all slots, free slots masked
+            # ---- decode tick: fused step over all slots; free and
+            # mid-prefill slots are masked (their cache_len doesn't advance
+            # and their sampled tokens are dropped)
             mask = np.asarray([a is not None for a in active], np.int32)
             if paged:
                 # Map the page each active slot's write position lands in
@@ -402,15 +579,34 @@ class ElasticEngine:
                 r.out_tokens.append(int(drained[i]))
                 self._tokens_out += 1
                 if len(r.out_tokens) >= r.max_new or \
-                        slot_len[i] >= self.max_len - 1:
+                        slot_len[i] >= self.prompt_capacity:
                     r.done = True
                     active[i] = None       # slot re-admissible next tick
                     if paged:              # pages recycle on the next admit
                         self._free_slot_pages(free_pages, bt, i)
                         cache["block_table"] = jnp.asarray(bt)
-            if all(a is None for a in active):
+                    wait_pages = False     # freed pages: admission may retry
+            self._record_tick(tick_pf_tokens, tick_pf_chunks, 1,
+                              time.perf_counter() - t_tick)
+            if all(a is None for a in active) and filling is None:
                 pinned = None
         return requests
+
+    def _record_tick(self, prefill_tokens: int, prefill_chunks: int,
+                     decode: int, wall_s: float) -> None:
+        """Append one scheduler-tick trace entry (reset per ``generate``).
+
+        ``prefill_tokens`` counts padded prompt tokens prefilled this tick
+        (one chunk at most under chunked admission; whole prompts under
+        monolithic), ``decode`` is 1 when a batched decode step ran. The
+        chunked-admission bound — no tick exceeds one chunk of prefill plus
+        one decode step — is asserted from these counters in tests, and
+        ``benchmarks/serve_engine_bench.py`` derives its decode-stall
+        column from ``wall_s``.
+        """
+        self.tick_trace.append({"prefill_tokens": prefill_tokens,
+                                "prefill_chunks": prefill_chunks,
+                                "decode": decode, "wall_s": wall_s})
 
     def _free_slot_pages(self, free_pages: List[int], bt: np.ndarray,
                          slot: int) -> None:
@@ -465,6 +661,8 @@ class ElasticEngine:
             "current": self.current_fmt,
             "fused": self.fused,
             "prefill_traces": self._prefill_traces,
+            "prefill_chunk": self.prefill_chunk,
+            "admission_requeues": self._admission_requeues,
             "kv_layout": self.kv_layout,
             "kv_cache_bytes": self._kv_cache_bytes,
             "kv_bytes_per_slot": self._kv_cache_bytes // self.slots,

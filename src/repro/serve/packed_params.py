@@ -285,10 +285,34 @@ def make_packed_serve_step(api, block_size: int = 32, *,
 
 def make_packed_prefill_slot(api, block_size: int = 32, *,
                              fused: bool = False):
-    """Single-slot prefill-insert over packed params (see ModelApi)."""
+    """Single-slot prefill-insert over packed params (see ModelApi).
+
+    This is the *monolithic* admission path: the whole prompt in one call.
+    The chunked counterpart is ``make_packed_prefill_chunk`` below; the
+    engine's admission state machine that drives both is documented in
+    docs/serving_internals.md ("Admission & scheduling").
+    """
     if fused:
         return _fused_api(api, block_size).prefill_slot
     return make_packed_fn(api, api.prefill_slot, block_size)
+
+
+def make_packed_prefill_chunk(api, block_size: int = 32, *,
+                              fused: bool = False):
+    """Single-slot *chunked* prefill over packed params.
+
+    ``(packed_params, batch{tokens (1,C), lengths}, cache, slot, start_pos)
+    -> (logits (V,), cache, new_len)`` — one prompt chunk at cursor
+    ``start_pos``. The engine calls it once per tick so a long admission
+    never stalls running slots for more than one chunk; it compiles once
+    per chunk *bucket* (C is the fixed chunk size, or a pow2 bucket of the
+    final remainder), not once per cursor — ``start_pos`` is traced.
+    Contracts mirror ``make_packed_prefill_slot``: fused Pallas dequant-GEMM
+    vs XLA densify-inside-jit, same packed tree, same logits.
+    """
+    if fused:
+        return _fused_api(api, block_size).prefill_chunk_slot
+    return make_packed_fn(api, api.prefill_chunk_slot, block_size)
 
 
 def weight_stream_bytes(params) -> int:

@@ -1,0 +1,221 @@
+"""Chunked prefill admission: the scheduler state machine that bounds
+per-tick work (docs/serving_internals.md "Admission & scheduling").
+
+The contract under test: splitting a prompt into ``prefill_chunk``-token
+chunks interleaved with decode ticks is a pure *re-scheduling* of the same
+computation — token streams stay bit-identical to monolithic admission
+(greedy AND seeded sampling, dense AND paged KV, densify AND fused serving
+contracts), while no scheduler tick ever runs more than one chunk of
+prefill plus one decode step. Under the paged layout, chunk N's pages are
+allocated at chunk N; a partial admission that exhausts the pool must
+release its pages and requeue, never leak or truncate.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_anchor
+from repro.core.qat import QATConfig
+from repro.models import get_model
+from repro.serve.engine import ElasticEngine, Request
+
+QAT = QATConfig(formats=("mxint4", "mxint8"), anchor="mxint8", block_size=32)
+PS = 8          # page size
+CHUNK = 8       # prefill chunk (== one page, the paged-layout default)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("smollm-135m")
+    api = get_model(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    anchor = make_anchor(params, QAT)
+    return cfg, api, params, anchor
+
+
+def _engine(api, anchor, params, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 48)
+    return ElasticEngine(api, anchor, param_template=params, **kw)
+
+
+def _reqs(cfg, n, max_new=5, plens=(8, 21, 13), seed=7):
+    """Mixed lengths on purpose: multi-chunk, chunk-aligned and
+    non-multiple-of-chunk prompts in one workload."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, plens[i % len(plens)])
+                    .astype(np.int32), max_new=max_new) for i in range(n)]
+
+
+def _streams(api, anchor, params, cfg, chunk, *, greedy=True, fmt="mxint8",
+             n=4, **kw):
+    eng = _engine(api, anchor, params, prefill_chunk=chunk, **kw)
+    reqs = _reqs(cfg, n)
+    eng.generate(reqs, greedy=greedy, fmt_override=fmt)
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], eng
+
+
+@pytest.mark.parametrize("kv,fused", [("dense", False), ("paged", False),
+                                      ("paged", True)])
+def test_chunked_matches_monolithic_greedy(setup, kv, fused):
+    """Acceptance gate: greedy streams bit-identical chunked vs monolithic,
+    across KV layouts and serving contracts."""
+    cfg, api, params, anchor = setup
+    kw = dict(fused=fused)
+    if kv == "paged":
+        kw.update(kv_layout="paged", kv_page_size=PS)
+    mono, _ = _streams(api, anchor, params, cfg, None, **kw)
+    chunked, eng = _streams(api, anchor, params, cfg, CHUNK, **kw)
+    assert mono == chunked
+    assert eng.stats["prefill_chunk"] == CHUNK
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fmt", ["bf16", "mxint4"])
+def test_chunked_matches_monolithic_other_formats(setup, fmt):
+    cfg, api, params, anchor = setup
+    mono, _ = _streams(api, anchor, params, cfg, None, fmt=fmt)
+    chunked, _ = _streams(api, anchor, params, cfg, CHUNK, fmt=fmt)
+    assert mono == chunked
+
+
+def test_chunked_matches_monolithic_sampled(setup):
+    """Seeded sampling: the slot RNG stream is seeded at prefill
+    *completion* (not admission start), so the chunked scheduler's extra
+    mid-prefill decode ticks cannot skew a request's draws."""
+    cfg, api, params, anchor = setup
+    kw = dict(seed=3, temperature=1.0, top_p=0.9)
+    mono, _ = _streams(api, anchor, params, cfg, None, greedy=False, **kw)
+    chunked, _ = _streams(api, anchor, params, cfg, CHUNK, greedy=False,
+                          **kw)
+    assert mono == chunked
+
+
+def test_prompt_not_multiple_of_chunk(setup):
+    """A final partial chunk (21 % 8 = 5, bucketed to 8 with exact masking)
+    must not perturb the stream — compare against monolithic on dense and
+    paged in one go."""
+    cfg, api, params, anchor = setup
+    for kw in (dict(), dict(kv_layout="paged", kv_page_size=PS)):
+        out = {}
+        for chunk in (None, CHUNK):
+            eng = _engine(api, anchor, params, prefill_chunk=chunk, **kw)
+            reqs = _reqs(cfg, 2, plens=(21, 13), seed=11)
+            eng.generate(reqs, fmt_override="mxint8")
+            out[chunk] = [r.out_tokens for r in reqs]
+        assert out[None] == out[CHUNK], kw
+
+
+def test_tick_work_is_bounded(setup):
+    """The scheduling claim itself, via the engine's trace counters: with
+    prefill_chunk set, NO tick runs more than one chunk of prefill plus one
+    decode step — while monolithic admission demonstrably stalls a tick for
+    the whole bucketed prompt."""
+    cfg, api, params, anchor = setup
+    long_req = _reqs(cfg, 3, plens=(30, 8, 8), seed=2)
+
+    eng = _engine(api, anchor, params, prefill_chunk=CHUNK)
+    eng.generate([Request(r.rid, r.prompt.copy(), r.max_new)
+                  for r in long_req], fmt_override="mxint8")
+    assert eng.tick_trace, "chunked run recorded no ticks"
+    for t in eng.tick_trace:
+        assert t["prefill_chunks"] <= 1
+        assert t["prefill_tokens"] <= CHUNK
+        assert t["decode"] <= 1
+
+    mono = _engine(api, anchor, params)
+    mono.generate([Request(r.rid, r.prompt.copy(), r.max_new)
+                   for r in long_req], fmt_override="mxint8")
+    # the 30-token prompt buckets to 32: monolithic admission does all of it
+    # (and possibly more prompts) inside a single tick
+    assert max(t["prefill_tokens"] for t in mono.tick_trace) >= 32
+
+
+def test_chunk_pages_allocated_per_chunk(setup):
+    """Pages for chunk N are allocated at chunk N, not all upfront: a pool
+    exactly sized for the final footprint still admits a long prompt, and
+    the high-water mark grows with the cursor."""
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params, kv_layout="paged", kv_page_size=PS,
+                  prefill_chunk=CHUNK, kv_num_pages=5, batch_slots=1)
+    reqs = _reqs(cfg, 1, plens=(22,), max_new=3, seed=4)
+    eng.generate(reqs, fmt_override="mxint8")
+    st = eng.stats
+    assert all(r.done for r in reqs)
+    # 3 prefill chunks -> 3 pages, one per chunk; decode stops at position
+    # 23 so the 4th page is never touched (and a 4-page upfront grab would
+    # have been wasted capacity for the pool's lifetime)
+    assert st["kv_pages_alloc"] == st["kv_pages_freed"] == 3
+    assert st["admission_requeues"] == 0
+
+
+def test_pool_exhaustion_mid_prefill_requeues_not_leaks(setup):
+    """Partial admission that starves the pool releases its pages and goes
+    back to the queue; once the running slot retires and frees pages, the
+    requeued prompt admits from chunk 0 and the stream matches a roomy
+    run. End state leaks nothing (alloc == freed)."""
+    cfg, api, params, anchor = setup
+    rng = np.random.default_rng(1)
+    mk = lambda: [Request(rid=0, prompt=rng0.copy(), max_new=8),
+                  Request(rid=1, prompt=rng1.copy(), max_new=3)]
+    rng0 = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    rng1 = rng.integers(0, cfg.vocab, 22).astype(np.int32)
+
+    roomy = _engine(api, anchor, params, max_len=32, kv_layout="paged",
+                    kv_page_size=PS, prefill_chunk=CHUNK)
+    ref = mk()
+    roomy.generate(ref, fmt_override="mxint8")
+
+    # 4 allocatable pages: slot 0 (6-token prompt, decode to pos 13) holds 2
+    # while the 22-token prompt needs 3 for prefill alone -> mid-prefill
+    # exhaustion, requeue, retry after slot 0 retires.
+    eng = _engine(api, anchor, params, max_len=32, kv_layout="paged",
+                  kv_page_size=PS, prefill_chunk=CHUNK, kv_num_pages=5)
+    reqs = mk()
+    eng.generate(reqs, fmt_override="mxint8")
+    st = eng.stats
+    assert all(r.done for r in reqs)
+    assert st["admission_requeues"] >= 1
+    assert st["kv_pages_alloc"] == st["kv_pages_freed"]       # no leak
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+
+
+def test_pool_exhaustion_with_nothing_running_raises(setup):
+    """Requeueing only makes sense if a running slot can free pages; a lone
+    prompt that cannot fit must fail loudly, same as monolithic."""
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params, max_len=32, kv_layout="paged",
+                  kv_page_size=PS, prefill_chunk=CHUNK, kv_num_pages=2)
+    with pytest.raises(RuntimeError, match="KV page pool exhausted"):
+        eng.generate(_reqs(cfg, 1, plens=(22,), max_new=3),
+                     fmt_override="mxint8")
+
+
+def test_chunked_rejects_unsupported_configs(setup):
+    """Recurrent mixers cannot resume prefill mid-prompt; paged chunks must
+    land on page boundaries."""
+    cfg_r = get_reduced("rwkv6-7b")
+    api_r = get_model(cfg_r, None)
+    params_r = api_r.init_params(jax.random.PRNGKey(0))
+    anchor_r = make_anchor(params_r, QAT)
+    with pytest.raises(ValueError, match="pure-attention"):
+        ElasticEngine(api_r, anchor_r, batch_slots=2, max_len=32,
+                      param_template=params_r, prefill_chunk=CHUNK)
+
+    cfg, api, params, anchor = setup
+    with pytest.raises(ValueError, match="multiple of"):
+        _engine(api, anchor, params, kv_layout="paged", kv_page_size=PS,
+                prefill_chunk=PS + 4)
+
+
+def test_auto_chunk_resolution(setup):
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params, kv_layout="paged", kv_page_size=PS,
+                  prefill_chunk="auto")
+    assert eng.prefill_chunk == PS                 # one KV page
+    eng2 = _engine(api, anchor, params, prefill_chunk="auto")
+    assert eng2.prefill_chunk == 64                # dense pow2 bucket cap
+    assert eng2.prompt_capacity == eng2.max_len - 1

@@ -1,0 +1,40 @@
+#!/usr/bin/env python3
+"""Fail the docs-smoke CI step on broken intra-repo markdown links.
+
+Scans README.md and docs/**/*.md for ``[text](target)`` links and verifies
+that every relative target (external schemes and pure #anchors are skipped)
+resolves to an existing file or directory, relative to the file containing
+the link. Keeps the cross-references between README.md,
+docs/serving_internals.md and the source tree honest as files move.
+"""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("**/*.md"))]
+    bad = []
+    n_links = 0
+    for f in files:
+        for m in LINK.finditer(f.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP):
+                continue
+            n_links += 1
+            path = (f.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                bad.append(f"{f.relative_to(ROOT)}: {target}")
+    if bad:
+        print("broken intra-repo links:\n  " + "\n  ".join(bad))
+        return 1
+    print(f"{len(files)} file(s), {n_links} intra-repo link(s): all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
