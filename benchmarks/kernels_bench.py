@@ -27,6 +27,7 @@ from repro.core.mx import (dequantize, quantize,              # noqa: E402
                            quantize_dequantize)
 from repro.core.slice_scale import slice_and_scale            # noqa: E402
 from repro.kernels import dispatch, ops                       # noqa: E402
+from repro.kernels import paged_attention as pattn            # noqa: E402
 from repro.serve.packed_params import pack_leaf_int4          # noqa: E402
 
 
@@ -130,6 +131,34 @@ def smoke():
         ref = np.asarray(dispatch.qmatmul(x, leaf, mode="densify"))
         np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-4)
         print(f"smoke {fmt_name}: pallas path live, parity ok ({st})")
+
+    # Paged decode attention: the gather-free kernel must be the path that
+    # actually traces under mode="pallas", and must match the gather +
+    # masked-softmax fallback on the same pool/block-table.
+    b, mp, ps, hkv, g, d = 2, 4, 8, 2, 2, 16
+    n_pages = b * mp + 1
+    q = jnp.asarray(rng.normal(size=(b, 1, hkv * g, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pages, ps, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, ps, hkv, d)), jnp.float32)
+    bt = np.zeros((b, mp), np.int32)
+    perm = rng.permutation(np.arange(1, n_pages))
+    lens = [9, 24]
+    for i, n in enumerate(lens):
+        k = -(-n // ps)
+        bt[i, :k] = perm[i * mp:i * mp + k]
+    bt = jnp.asarray(bt)
+    cl = jnp.asarray(lens, jnp.int32)
+    pattn.reset_stats()
+    got = np.asarray(pattn.paged_decode_attention(q, kp, vp, bt, cl,
+                                                  mode="pallas"))
+    st = pattn.stats()
+    assert st["pallas"] >= 1 and st["fallback"] == 0, (
+        f"paged attention regressed to the gather fallback: {st}")
+    ref = np.asarray(pattn.paged_decode_attention(q, kp, vp, bt, cl,
+                                                  mode="fallback"))
+    assert pattn.stats()["fallback"] >= 1
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    print(f"smoke paged_attention: pallas path live, parity ok ({st})")
     print("smoke: OK")
 
 

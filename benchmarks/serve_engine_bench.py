@@ -1,5 +1,6 @@
 """Engine-level serving benchmark: fused-kernel vs densify-inside-jit,
-dense vs paged KV, and monolithic vs chunked prefill admission.
+dense vs paged KV, monolithic vs chunked prefill admission, and gather vs
+gather-free paged decode attention.
 
 Runs the packed-weight continuous-batching ElasticEngine at dense bf16,
 mxint8 (MXTensor codes) and mxint4 (split-N nibble-packed) under BOTH
@@ -21,6 +22,15 @@ the XLA densify-inside-jit fallback (``densify``) — and reports one table:
     to the workload's live-token demand — the measured (not asserted) memory
     win of block-table paging. Token streams are bit-identical across
     layouts, so the kv rows differ ONLY in this column and wall time.
+  - attn_bytes_per_token: decode-attention KV reads per generated token
+    (per-layer K+V bytes actually spanned, from the engine's host-side
+    accounting). The paged rows run BOTH attn impls: ``gather``
+    materializes every slot's full logical view (max_pages×page_size
+    tokens) each tick, the gather-free kernel (``paged_kernel``,
+    kernels/paged_attention.py) reads only ``ceil(cache_len/page)`` pages
+    per slot — the measured roofline win of block-table attention. Token
+    streams are bit-identical across impls; the bench verifies that like
+    the cross-admission check.
   - ttft_p50_ms / ttft_p99_ms / stall_p99_ms / max_pf_tok: the admission
     latency columns. The workload mixes short prompts with long ones
     (every ``--long-every``-th request is ``--long-len`` tokens), and the
@@ -68,7 +78,7 @@ def _pct(xs, q):
 def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
                n_requests, max_new, vocab, kv_layout="dense", page_size=8,
                admission="monolithic", prefill_chunk=8, long_every=3,
-               long_len=40):
+               long_len=40, attn_impl="gather"):
     kv_kw = {}
     if kv_layout == "paged":
         # Size the pool to the workload's live-token demand (longest prompt
@@ -76,7 +86,8 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
         # freedom is the whole point of paging.
         per_slot = -(-(long_len + max_new) // page_size)
         kv_kw = dict(kv_layout="paged", kv_page_size=page_size,
-                     kv_num_pages=slots * per_slot + 1)
+                     kv_num_pages=slots * per_slot + 1,
+                     attn_impl=attn_impl)
     eng = ElasticEngine(
         api, anchor, batch_slots=slots, max_len=max_len,
         param_template=params, fused=fused,
@@ -96,6 +107,7 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
     eng.generate(reqs[:WARMUP], fmt_override=fmt)  # warmup: compile + SS
     t0 = time.perf_counter()
     ticks0, toks0 = eng.stats["ticks"], eng.stats["tokens_out"]
+    attn0 = eng.stats["attn_read_bytes"]
     eng.generate(reqs[WARMUP:], fmt_override=fmt)
     dt = time.perf_counter() - t0
     st = eng.stats
@@ -113,6 +125,9 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
         "path": ("fused" if fused else "densify") if fmt != "bf16"
                 else "dense",
         "kv": kv_layout,
+        "attn": st["attn_impl"],
+        "attn_bytes_per_token": (st["attn_read_bytes"] - attn0)
+        / max(toks, 1),
         "admission": admission,
         "containers": "+".join(st["containers"][fmt]),
         "weight_bytes": wbytes,
@@ -149,6 +164,10 @@ def main():
     ap.add_argument("--admission", default="both",
                     choices=("both", "monolithic", "chunked"),
                     help="prompt admission mode(s) to benchmark")
+    ap.add_argument("--attn", default="both",
+                    choices=("both", "gather", "paged_kernel"),
+                    help="paged decode-attention impl(s) to benchmark "
+                         "(paged rows only; dense KV has no block table)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunk size for the chunked admission rows "
                          "(default: one KV page, min 8)")
@@ -178,52 +197,83 @@ def main():
     layouts = ("dense", "paged") if args.kv == "both" else (args.kv,)
     admissions = ("monolithic", "chunked") if args.admission == "both" \
         else (args.admission,)
+    attns = ("gather", "paged_kernel") if args.attn == "both" \
+        else (args.attn,)
     rows = []
     for adm in admissions:
         for kv in layouts:
-            for fmt in FORMATS:
-                if fmt == "bf16":  # dense pseudo-format: one path
-                    rows.append(bench_path(api, anchor, params, fmt, False,
-                                           kv_layout=kv, admission=adm,
-                                           **kw))
-                    continue
-                if want_fused:
-                    rows.append(bench_path(api, anchor, params, fmt, True,
-                                           kv_layout=kv, admission=adm,
-                                           **kw))
-                if want_dense:
-                    rows.append(bench_path(api, anchor, params, fmt, False,
-                                           kv_layout=kv, admission=adm,
-                                           **kw))
+            for attn in (attns if kv == "paged" else ("gather",)):
+                for fmt in FORMATS:
+                    if fmt == "bf16":  # dense pseudo-format: one path
+                        rows.append(bench_path(api, anchor, params, fmt,
+                                               False, kv_layout=kv,
+                                               admission=adm,
+                                               attn_impl=attn, **kw))
+                        continue
+                    if want_fused:
+                        rows.append(bench_path(api, anchor, params, fmt,
+                                               True, kv_layout=kv,
+                                               admission=adm,
+                                               attn_impl=attn, **kw))
+                    if want_dense:
+                        rows.append(bench_path(api, anchor, params, fmt,
+                                               False, kv_layout=kv,
+                                               admission=adm,
+                                               attn_impl=attn, **kw))
 
     base = next(r for r in rows if r["fmt"] == "bf16")
     # KV ratios are vs the DENSE layout; without a dense row (--kv paged)
     # there is no baseline to compare against, so print n/a rather than a
     # misleading same-layout 1.00x.
     kv_base = next((r for r in rows if r["kv"] == "dense"), None)
-    print("fmt,path,kv,admission,containers,weight_bytes,ticks,tokens,"
+    print("fmt,path,kv,attn,admission,containers,weight_bytes,ticks,tokens,"
           "tokens_per_tick,weight_bytes_per_token,bytes_cut_vs_bf16,"
-          "kv_bytes_per_slot,kv_cut_vs_dense,ttft_p50_ms,ttft_p99_ms,"
-          "stall_p99_ms,max_pf_tok,wall_s")
+          "kv_bytes_per_slot,kv_cut_vs_dense,attn_bytes_per_token,"
+          "ttft_p50_ms,ttft_p99_ms,stall_p99_ms,max_pf_tok,wall_s")
     for r in rows:
         cut = base["weight_bytes_per_token"] / r["weight_bytes_per_token"]
         kv_cut = "n/a" if kv_base is None else \
             f"{kv_base['kv_bytes_per_slot'] / max(r['kv_bytes_per_slot'], 1):.2f}x"
-        print(f"{r['fmt']},{r['path']},{r['kv']},{r['admission']},"
-              f"{r['containers']},"
+        print(f"{r['fmt']},{r['path']},{r['kv']},{r['attn']},"
+              f"{r['admission']},{r['containers']},"
               f"{r['weight_bytes']},{r['ticks']},{r['tokens']},"
               f"{r['tokens_per_tick']:.2f},"
               f"{r['weight_bytes_per_token']:.0f},{cut:.2f}x,"
               f"{r['kv_bytes_per_slot']},{kv_cut},"
+              f"{r['attn_bytes_per_token']:.0f},"
               f"{r['ttft_p50_ms']:.1f},{r['ttft_p99_ms']:.1f},"
               f"{r['stall_p99_ms']:.1f},{r['max_pf_tok']},"
               f"{r['wall_s']:.2f}")
+
+    if len(attns) == 2 and "paged" in layouts:
+        # The attention-impl contract: the gather-free kernel changes the
+        # bytes read, never the tokens produced.
+        keyed = {}
+        for r in rows:
+            if r["kv"] != "paged":
+                continue
+            keyed.setdefault((r["fmt"], r["path"], r["admission"]),
+                             {})[r["attn"]] = r
+        pairs = [p for p in keyed.values() if len(p) == 2]
+        identical = all(p["gather"]["streams"] == p["paged_kernel"]["streams"]
+                        for p in pairs)
+        g_bytes = _pct([p["gather"]["attn_bytes_per_token"]
+                        for p in pairs], 0.5)
+        k_bytes = _pct([p["paged_kernel"]["attn_bytes_per_token"]
+                        for p in pairs], 0.5)
+        print(f"# paged_kernel vs gather: token streams identical across "
+              f"all configs = {identical}; median attn bytes/token "
+              f"{g_bytes:.0f} -> {k_bytes:.0f} "
+              f"({g_bytes / max(k_bytes, 1e-9):.2f}x cut)")
+        if not identical:
+            raise SystemExit("token streams diverged between attention "
+                             "impls — the paged kernel broke bit-identity")
 
     if len(admissions) == 2:
         # The chunked-admission contract: same tokens, smaller stall tail.
         keyed = {}
         for r in rows:
-            keyed.setdefault((r["fmt"], r["path"], r["kv"]),
+            keyed.setdefault((r["fmt"], r["path"], r["kv"], r["attn"]),
                              {})[r["admission"]] = r
         identical = all(p["monolithic"]["streams"] == p["chunked"]["streams"]
                         for p in keyed.values() if len(p) == 2)

@@ -17,6 +17,11 @@ The engine runs with the paged KV cache (kv_layout="paged"): KV HBM is
 committed one page at a time as sequences grow and recycled the moment a
 request retires, instead of preallocating max_len per slot — token streams
 are identical to the dense layout (see docs/serving_internals.md §5).
+Decode attention reads the pool through the attn_impl knob: --attn-impl
+paged_kernel runs the gather-free block-table kernel
+(kernels/paged_attention.py; interpret mode off TPU), --attn-impl gather
+materializes each slot's logical view first — token streams are identical
+either way, and the stats line reports the attention bytes each path read.
 
 With --prefill-chunk N, admission is *chunked* (docs/serving_internals.md
 §6): long prompts stream in N-token chunks interleaved with decode ticks —
@@ -47,6 +52,10 @@ def main():
                     help="chunked admission: tokens per prefill chunk "
                          "(multiple of the 8-token page size); default "
                          "monolithic")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=("gather", "paged_kernel"),
+                    help="paged decode-attention read path (default: "
+                         "kernel on TPU, gather elsewhere)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -64,6 +73,7 @@ def main():
     eng = ElasticEngine(api, anchor, batch_slots=4, max_len=64,
                         policy=policy, param_template=params,
                         kv_layout="paged", kv_page_size=8,
+                        attn_impl=args.attn_impl,
                         prefill_chunk=args.prefill_chunk,
                         kv_num_pages=4 * (7 if chunked else 3) + 1)
     #   pool is live-token sized, not slots*max_len — pages recycle across
@@ -129,6 +139,11 @@ def main():
           f"high-water {st['kv_pages_hwm']}, "
           f"{st['kv_pages_alloc']} allocs / {st['kv_pages_freed']} frees "
           "-> pages recycled across the burst)")
+    print(f"decode attention: impl={st['attn_impl']} "
+          f"read {st['attn_read_bytes']} KV bytes total "
+          f"({st['attn_tokens_read']} token-positions; the gather path "
+          "spans the full logical view every tick, the paged kernel only "
+          "the live pages)")
     print("one anchor checkpoint served "
           f"{len(st['formats_cached'])} precisions; each decode tick streams "
           "the PACKED bytes above, not dense bf16.")

@@ -5,12 +5,16 @@ Kernels (pl.pallas_call + explicit BlockSpec VMEM tiling):
   fake_quant   — QAT forward quant-dequant in one VMEM pass
   ss_convert   — Slice-and-Scale on packed codes (int shift-RNE / fp requant)
   mx_matmul    — dequant-fused GEMM over packed MX weights (+ int4-packed)
+  paged_attention — gather-free paged decode attention over the block table
 
 ``ops`` holds the jit'd public wrappers (interpret=True on CPU), ``ref`` the
 pure-jnp oracles every kernel is tested against, and ``dispatch`` the
 serving-path entry point: ``qmatmul(x, leaf)`` routes packed weight
 containers (MXTensor / split-N PackedInt4Leaf) into the fused dequant-GEMM
 with shape padding, tile selection, and an XLA densify fallback.
+``paged_attention.paged_decode_attention`` is the analogous shim for the
+decode-attention side: block-table kernel vs gather fallback, with its own
+trace-time path counters.
 """
-from repro.kernels import dispatch, ops, ref  # noqa: F401
+from repro.kernels import dispatch, ops, paged_attention, ref  # noqa: F401
 from repro.kernels.dispatch import qmatmul  # noqa: F401

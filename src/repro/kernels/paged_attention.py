@@ -1,0 +1,261 @@
+"""Pallas TPU kernel: gather-free paged decode attention over the block table.
+
+``paged_gather`` (models/layers.py) made paged serving *correct* by
+materializing each slot's logical KV view — (B, max_pages*page_size, Hkv, D)
+per layer per tick — before the masked softmax, so attention-side HBM
+traffic and scratch footprint still scaled with ``max_len`` rather than live
+tokens. This kernel is the PagedAttention move (Kwon et al., SOSP 2023): it
+consumes the page pools and the per-slot block table *directly*.
+
+Grid = (slot, logical KV block). Each step translates logical block ``j`` →
+physical page via the scalar-prefetched block table (the index map picks the
+page, so only the pages a slot actually occupies are ever DMA'd into VMEM)
+and folds one page into a flash-style running (max, sum-exp, acc) partial
+softmax held in VMEM scratch. Steps past the live frontier revisit the last
+live page — Pallas skips the DMA when the block index repeats — so per-slot
+KV reads are ``ceil(cache_len/page_size)`` pages, not ``max_pages``.
+
+Masking is IN-KERNEL and total: a position contributes iff
+``pos < cache_len`` (and, with a sliding window, ``pos >= cache_len - W``).
+Scores at dead positions are forced to -inf *before* the running max,
+probabilities are re-zeroed after the exp, and V rows are zeroed before the
+PV product — so garbage beyond the write frontier, scratch-page-0 contents,
+and unallocated pages never enter the reduction, **even when they hold NaN
+or ±1e9** (0 * NaN = NaN, which is why masking only the scores is not
+enough; the adversarial poison tests in tests/test_paged_attention_kernel.py
+hold this line). ``cache_len == 0`` rows produce exact zeros (the dense
+reference NaNs there — no valid key exists; the engine never emits it since
+decode always appends before attending).
+
+GQA (``Hkv != H``) runs natively: queries fold to (Hkv, G, D) and every
+reduction stays per-kv-head, matching ``decode_attention``.
+
+Dispatch (mirroring kernels/dispatch.py): ``paged_decode_attention`` is the
+serving entry point. Mode "pallas" runs this kernel — Mosaic on TPU,
+interpret-mode elsewhere (the test/CI correctness path); mode "fallback"
+keeps the original gather + ``decode_attention`` pair; "auto" picks
+"pallas" on TPU. Trace-time ``stats()`` counters let benchmarks and the
+``kernels_bench.py --smoke`` CI gate assert which path is live.
+
+Layout/placement conventions are documented in docs/serving_internals.md §5.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# ---------------------------------------------------------------------------
+# Mode resolution + trace-time accounting (kernels/dispatch.py conventions)
+# ---------------------------------------------------------------------------
+MODES = ("auto", "pallas", "fallback")
+
+_stats: Dict[str, int] = {"pallas": 0, "fallback": 0}
+
+
+def stats() -> Dict[str, int]:
+    """Trace-time counts of which paged-attention path was dispatched."""
+    return dict(_stats)
+
+
+def reset_stats() -> None:
+    for k in _stats:
+        _stats[k] = 0
+
+
+def default_mode() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "fallback"
+
+
+def resolve_mode(mode: Optional[str]) -> str:
+    if mode is None or mode == "auto":
+        return default_mode()
+    if mode not in ("pallas", "fallback"):
+        raise ValueError(
+            f"unknown paged-attention mode {mode!r}; one of {MODES}")
+    return mode
+
+
+def _interpret() -> bool:
+    # Mosaic only lowers on TPU; everywhere else the kernel body runs in the
+    # Pallas interpreter (exactly as written — the CI correctness contract).
+    return jax.default_backend() != "tpu"
+
+
+def pages_read(length: int, page_size: int,
+               window: Optional[int] = None) -> int:
+    """Distinct pages one slot's block-table walk DMAs for ``length`` live
+    tokens — THE host-side mirror of ``kv_index``'s clamp arithmetic below
+    (the engine's attention-read accounting must use this, never reimplement
+    it, so the metric stays definitionally consistent with the kernel).
+    Zero-length rows still fetch the clamped page 0 once."""
+    pages = max(-(-length // page_size), 1)
+    if window is not None:
+        pages -= min(max((length - window) // page_size, 0), pages - 1)
+    return pages
+
+
+# ---------------------------------------------------------------------------
+# The kernel
+# ---------------------------------------------------------------------------
+def _paged_attn_kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *,
+                       page_size: int, window: Optional[int],
+                       hkv: int, g: int):
+    """One (slot, logical-block) grid step of the flash partial softmax.
+
+    ``bt_ref``/``cl_ref`` are the scalar-prefetched block table and
+    cache_len (also consumed by the index maps); ``k_ref``/``v_ref`` hold
+    ONE physical page each — the page this slot's block ``j`` maps to.
+    Scratch (m, l, acc) persists across the j-minor grid walk of a slot.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    mp = pl.num_programs(1)
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = cl_ref[b]
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]
+    valid = pos < cache_len
+    if window is not None:
+        valid &= pos >= cache_len - window
+
+    # Skip pages with no live position: keeps the running max finite (a
+    # wholly-masked page would be all -inf and poison the carry with
+    # exp(-inf - -inf) = NaN) and skips the FLOPs past the frontier.
+    @pl.when(jnp.any(valid))
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32).reshape(hkv, g, d)
+        k = k_ref[0].astype(jnp.float32)             # (ps, Hkv, D)
+        s = jnp.einsum("kgd,tkd->kgt", q, k) * scale
+        # Mask BEFORE the max — dead positions may hold NaN (poisoned /
+        # recycled pages) and NaN propagates through jnp.maximum.
+        s = jnp.where(valid[None, None, :], s, -jnp.inf)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        # p is already 0 at dead positions (exp(-inf)) but 0 * NaN = NaN in
+        # the PV product, so the V rows are zeroed too — this pair is what
+        # the NaN-poison tests pin down.
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        v = jnp.where(valid[:, None, None],
+                      v_ref[0].astype(jnp.float32), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            jnp.einsum("kgt,tkd->kgd", p, v)
+        m_ref[...] = m_new
+
+    @pl.when(j == mp - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.where(l[..., None] > 0, out, 0.0)   # cache_len==0 -> zeros
+        o_ref[0] = out.reshape(hkv * g, d).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           cache_len: jax.Array, *,
+                           window: Optional[int] = None,
+                           interpret: bool = False) -> jax.Array:
+    """Single-token attention straight off the page pool: (B, H, D) f32.
+
+    q (B, H, D); k_pages/v_pages (P, page_size, Hkv, D) — ONE layer's pool;
+    block_table (B, max_pages) int32 physical page ids (0 = unmapped /
+    scratch); cache_len (B,) int32 live lengths (may be traced). The block
+    table and cache_len ride as scalar-prefetch operands so the KV index
+    maps can translate logical block → physical page before each DMA.
+    """
+    b, h, d = q.shape
+    ps = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    mp = block_table.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+
+    def kv_index(bi, j, bt, cl):
+        # Clamp the walk to the live block range: steps outside it revisit
+        # the nearest live page, and Pallas elides the DMA when the index
+        # repeats — the bytes-read term drops from max_pages to
+        # ceil(cache_len/ps) pages (to the ~window/ps in-window pages when
+        # sliding; blocks below the window hold no valid position, their
+        # compute is @pl.when-skipped, so revisiting the first in-window
+        # page is safe).
+        last = jnp.maximum(pl.cdiv(cl[bi], ps) - 1, 0)
+        jc = jnp.minimum(j, last)
+        if window is not None:
+            first = jnp.clip((cl[bi] - window) // ps, 0, last)
+            jc = jnp.maximum(jc, first)
+        return (bt[bi, jc], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, j, bt, cl: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, hkv, d), kv_index),
+            pl.BlockSpec((1, ps, hkv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bi, j, bt, cl: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g), jnp.float32),       # running max
+            pltpu.VMEM((hkv, g), jnp.float32),       # running sum-exp
+            pltpu.VMEM((hkv, g, d), jnp.float32),    # running PV acc
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attn_kernel, page_size=ps, window=window,
+                          hkv=hkv, g=g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=interpret,
+    )(block_table, cache_len, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Serving dispatch shim
+# ---------------------------------------------------------------------------
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           cache_len: jax.Array, *,
+                           window: Optional[int] = None,
+                           mode: Optional[str] = None) -> jax.Array:
+    """Paged decode attention: q (B, 1, H, D) over the page pool -> same.
+
+    The paged counterpart of ``decode_attention`` and the entry point
+    ``attention_block``'s paged-decode branch routes through. ``mode``:
+
+      "pallas"    the gather-free kernel above (Mosaic on TPU, interpret
+                  elsewhere — the test path). ``attn_impl="paged_kernel"``.
+      "fallback"  ``paged_gather`` + masked ``decode_attention`` — the
+                  original materialize-then-attend pair, kept selectable for
+                  comparison. ``attn_impl="gather"``.
+      "auto"/None "pallas" on TPU, "fallback" elsewhere.
+
+    ``cache_len`` must already include this tick's appended token (callers
+    pass ``cache_len + 1``, exactly as for ``decode_attention``).
+    """
+    if resolve_mode(mode) == "pallas":
+        _stats["pallas"] += 1
+        out = paged_attention_pallas(q[:, 0], k_pages, v_pages, block_table,
+                                     cache_len, window=window,
+                                     interpret=_interpret())
+        return out[:, None].astype(q.dtype)
+    _stats["fallback"] += 1
+    from repro.models.layers import decode_attention, paged_gather
+    return decode_attention(q, paged_gather(k_pages, block_table),
+                            paged_gather(v_pages, block_table),
+                            cache_len, window=window)

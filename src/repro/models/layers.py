@@ -230,6 +230,15 @@ def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     A plain gather — positions come back in logical order, so the result
     drops into ``decode_attention`` exactly like a dense cache (garbage past
     cache_len is masked there, same as dense pad positions).
+
+    This is the decode *fallback*, not the decode path: the default paged
+    decode on TPU is the gather-free Pallas kernel in
+    ``kernels/paged_attention.py``, which consumes the pool + block table
+    directly and never materializes this dense view — attention reads scale
+    with live tokens, not ``max_pages*ps``. The pair stays selectable via
+    ``attn_impl="gather"`` (see ``paged_decode_attention`` and
+    docs/serving_internals.md §5); chunked *prefill* still reads through
+    this gather (its flash queries span the whole cache).
     """
     b, mp = block_table.shape
     pages = pool[block_table]                 # (B, MP, ps, Hkv, D)
@@ -246,15 +255,20 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
                     cross_kv: Optional[Tuple] = None,
                     causal: bool = True,
                     block_table: Optional[jax.Array] = None,
-                    chunk_start: Optional[jax.Array] = None):
+                    chunk_start: Optional[jax.Array] = None,
+                    attn_impl: str = "gather"):
     """Self- (or cross-) attention. Returns (out, new_kv) where new_kv is the
     (k, v) tensors produced at this layer (for cache building) or the updated
     cache in decode mode.
 
     With ``block_table`` set, ``kv_cache`` holds paged pools
     (num_pages, page_size, Hkv, D): the new token is appended through the
-    block-table indirection and attention gathers the slot's pages back into
-    logical order before the same masked single-query softmax.
+    block-table indirection and attention runs over the pool via
+    ``paged_decode_attention`` — ``attn_impl="paged_kernel"`` consumes the
+    block table directly in the gather-free Pallas kernel
+    (kernels/paged_attention.py), ``"gather"`` materializes the slot's pages
+    back into logical order first and feeds the same masked single-query
+    softmax. Both read identical KV values at every valid position.
 
     With ``chunk_start`` set (chunked prefill; see docs/serving_internals.md
     "Admission & scheduling"), ``x`` is one prompt *chunk* whose first token
@@ -308,14 +322,17 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
                               q_offset=chunk_start, chunk=cfg.seq_chunk)
         new_kv = (kc, vc)
     elif kv_cache is not None and block_table is not None:
-        # paged decode: append through the block table, gather the slot's
-        # pages back into logical order, attend with the same length mask.
+        # paged decode: append through the block table, then attend over the
+        # pool — gather-free kernel or gather+masked-softmax fallback per
+        # attn_impl (one shim, trace-time path counters).
+        from repro.kernels.paged_attention import paged_decode_attention
         kc, vc = kv_cache
         kc = paged_decode_append(kc, k, block_table, cache_len)
         vc = paged_decode_append(vc, v, block_table, cache_len)
-        out = decode_attention(q, paged_gather(kc, block_table),
-                               paged_gather(vc, block_table), cache_len + 1,
-                               window=cfg.sliding_window)
+        out = paged_decode_attention(
+            q, kc, vc, block_table, cache_len + 1,
+            window=cfg.sliding_window,
+            mode="pallas" if attn_impl == "paged_kernel" else "fallback")
         new_kv = (kc, vc)
     elif kv_cache is not None:
         # decode: write this token's k/v at each slot's own cache_len, attend

@@ -205,13 +205,16 @@ def param_axes(cfg: ModelConfig) -> Dict:
 # =============================================================================
 def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
            cache_slice, cache_len, prefill: bool, block_table=None,
-           chunk_start=None):
+           chunk_start=None, attn_impl: str = "gather"):
     """One block. Returns (x, new_cache_slice).
 
     ``block_table`` (B, max_pages) selects the paged KV layout: attention
     cache slices hold page pools (``k_pages``/``v_pages``) instead of
     per-slot contiguous buffers, and all reads/writes go through the
-    block-table indirection (see layers.py paged helpers).
+    block-table indirection (see layers.py paged helpers). ``attn_impl``
+    picks the paged *decode* read path — the gather-free Pallas kernel
+    (``"paged_kernel"``, kernels/paged_attention.py) vs gather + masked
+    softmax (``"gather"``); ignored outside paged decode.
 
     ``chunk_start`` (scalar, may be traced; implies ``prefill=True``)
     selects chunked prefill: ``x`` is one prompt chunk whose first token
@@ -240,7 +243,8 @@ def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
             ctx, h, p["attn"], cfg, positions, name,
             kv_cache=kv, cache_len=cache_len,
             block_table=block_table if paged else None,
-            chunk_start=chunk_start if chunked else None)
+            chunk_start=chunk_start if chunked else None,
+            attn_impl=attn_impl)
         if cache_slice is not None:
             if chunked:
                 new_cache = {"k_pages": new_kv[0], "v_pages": new_kv[1]} \
@@ -304,7 +308,7 @@ def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
 
 def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
                    cache=None, cache_len=None, prefill: bool = False,
-                   chunk_start=None):
+                   chunk_start=None, attn_impl: str = "gather"):
     """Run the block stack. x (B,S,d). Returns (hidden, new_cache, aux)."""
     # Sequence-parallel residual: the per-group saved activation (the scan
     # carry, which dominates train memory at depth) shards its seq dim over
@@ -325,7 +329,8 @@ def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
 
             def layer_call(xv_, p_, cs_, _j=j):
                 return _layer(ctx, xv_, p_, cfg, _j, positions, cs_,
-                              cache_len, prefill, block_table, chunk_start)
+                              cache_len, prefill, block_table, chunk_start,
+                              attn_impl)
 
             if cfg.remat_inner and cfg.scan_group > 1:
                 layer_call = jax.checkpoint(
@@ -470,6 +475,16 @@ class ModelApi:
     with_qmm: Callable = None      # (qmm) -> ModelApi whose serving entry
     #                                points route packed weight leaves
     #                                through the fused dequant-GEMM hook
+    with_serving: Callable = None  # (qmm=None, attn_impl="gather") ->
+    #                                ModelApi with BOTH serving knobs baked
+    #                                into the rebuilt entry points: the
+    #                                dequant-GEMM hook and the paged decode
+    #                                attention path ("gather" |
+    #                                "paged_kernel"); the derived api's
+    #                                with_qmm preserves its attn_impl, so
+    #                                chaining composes rather than resetting
+    attn_impl: str = "gather"      # paged decode read path the serving
+    #                                entry points were built with
 
 
 def _cache_for_block(cfg: ModelConfig, j: int, b: int, s_max: int, dtype):
@@ -592,13 +607,21 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         return {"blocks": [_cache_axes_for_block(cfg, j)
                            for j in range(cfg.scan_group)]}
 
-    def _serving_fns(qmm=None):
+    def _serving_fns(qmm=None, attn_impl="gather"):
         """Build (prefill, serve_step) sharing one matmul hook.
 
         ``qmm=None`` is the XLA contract (packed leaves dequantized at point
         of use / pre-densified trees); a hook routes every packed projection
-        through the fused Pallas dequant-GEMM dispatch.
+        through the fused Pallas dequant-GEMM dispatch. ``attn_impl`` bakes
+        the paged decode attention path into serve_step: ``"paged_kernel"``
+        (the gather-free block-table kernel, kernels/paged_attention.py) or
+        ``"gather"`` (materialize + masked softmax). Prefill — monolithic
+        and chunked — is unaffected (its flash queries span the cache).
         """
+        if attn_impl not in ("gather", "paged_kernel"):
+            raise ValueError(
+                f"unknown attn_impl {attn_impl!r}; one of "
+                "('gather', 'paged_kernel')")
 
         def prefill(params, batch, cache):
             """Process the full prompt, fill the cache, return last-pos
@@ -684,7 +707,7 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
             positions = cache_len[:, None]
             hidden, new_cache, _ = forward_hidden(
                 ctx, params, cfg, x, positions, cache=cache,
-                cache_len=cache_len, prefill=False)
+                cache_len=cache_len, prefill=False, attn_impl=attn_impl)
             logits = _head_logits(ctx, params, cfg, hidden[:, -1])
             logits = shard_act(logits, ("batch", "vocab"))
             return logits, new_cache
@@ -693,12 +716,19 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
 
     prefill, serve_step, prefill_chunk = _serving_fns(None)
 
-    def with_qmm(qmm):
-        p, s, pc = _serving_fns(qmm)
+    def with_serving(qmm=None, attn_impl="gather"):
+        p, s, pc = _serving_fns(qmm, attn_impl)
         return dataclasses.replace(
             api, prefill=p, serve_step=s, prefill_slot=make_prefill_slot(p),
             prefill_chunk=pc,
-            prefill_chunk_slot=make_prefill_chunk_slot(pc))
+            prefill_chunk_slot=make_prefill_chunk_slot(pc),
+            attn_impl=attn_impl,
+            # with_qmm on the derived api keeps ITS attn_impl (chaining must
+            # not silently reset the decode path to the base default)
+            with_qmm=lambda q: with_serving(qmm=q, attn_impl=attn_impl))
+
+    def with_qmm(qmm):
+        return with_serving(qmm=qmm)
 
     api = ModelApi(
         cfg=cfg, qat=qat,
@@ -713,5 +743,6 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         prefill_chunk=prefill_chunk,
         prefill_chunk_slot=make_prefill_chunk_slot(prefill_chunk),
         with_qmm=with_qmm,
+        with_serving=with_serving,
     )
     return api

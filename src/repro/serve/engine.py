@@ -69,6 +69,7 @@ import numpy as np
 from repro.core.anchor import AnchorModel, convert, materialize
 from repro.core.formats import get_format
 from repro.core.mx import MXTensor
+from repro.kernels.paged_attention import pages_read
 from repro.models.transformer import ModelApi
 from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
                                        make_packed_params,
@@ -148,6 +149,23 @@ class ElasticEngine:
     capacity: slots × ceil(max_len/page) + 1 scratch page). Token streams
     are bit-identical across layouts (same values at every valid position).
 
+    ``attn_impl`` selects the paged decode-attention read path:
+    ``"paged_kernel"`` consumes the page pools + block table directly in the
+    gather-free Pallas kernel (``kernels/paged_attention.py`` — Mosaic on
+    TPU, interpret-mode in tests), so per-tick attention reads scale with
+    live tokens (``ceil(cache_len/page)`` pages per slot); ``"gather"``
+    keeps the original materialize-then-attend pair, whose reads scale with
+    ``max_pages*page`` regardless of occupancy. None = kernel on TPU when
+    paged, gather elsewhere. Both impls read the same KV values at every
+    valid position and reduce in fp32, but the kernel's online softmax
+    reorders the reduction, so logits can differ by ulps — token-stream
+    equality across impls is an *empirically held* contract (asserted
+    exactly by tests and the bench on this backend), not an algebraic one;
+    ``stats()["attn_tokens_read"]`` accounts the read-traffic difference and
+    ``benchmarks/serve_engine_bench.py`` turns it into attention-bytes/token.
+    Requires ``kv_layout="paged"`` — the dense layout has no block table to
+    consume.
+
     ``prefill_chunk`` selects the admission mode (the slot-lifecycle state
     machine is documented in docs/serving_internals.md, "Admission &
     scheduling"). ``None`` (default) admits monolithically: each prompt is
@@ -172,6 +190,7 @@ class ElasticEngine:
                  bucket_prompts: bool = True,
                  kv_layout: str = "dense", kv_page_size: int = 16,
                  kv_num_pages: Optional[int] = None,
+                 attn_impl: Optional[str] = None,
                  prefill_chunk=None):
         self.api = api
         self.anchor = anchor
@@ -216,6 +235,27 @@ class ElasticEngine:
         self.kv_layout = kv_layout
         self.kv_page_size = kv_page_size
         self.kv_num_pages = kv_num_pages
+        # Paged decode-attention read path (class docstring): auto = the
+        # gather-free kernel where Mosaic lowers, the gather fallback
+        # elsewhere (tests opt into the kernel explicitly -> interpret mode).
+        if attn_impl is None:
+            attn_impl = "paged_kernel" if (
+                kv_layout == "paged"
+                and jax.default_backend() == "tpu") else "gather"
+        if attn_impl not in ("gather", "paged_kernel"):
+            raise ValueError(f"unknown attn_impl {attn_impl!r}; one of "
+                             "('gather', 'paged_kernel')")
+        if attn_impl == "paged_kernel" and kv_layout != "paged":
+            raise ValueError(
+                "attn_impl='paged_kernel' requires kv_layout='paged' — the "
+                "dense layout has no block table for the kernel to consume")
+        self.attn_impl = attn_impl
+        self._attn_tokens_read = 0   # KV tokens decode attention read (host
+        #                              mirror; see stats()["attn_tokens_read"])
+        cfg = api.cfg
+        self._attn_layers = 0 if cfg.family == "ssm" else sum(
+            cfg.is_attn_layer(j) for j in range(cfg.scan_group)) \
+            * cfg.n_groups
         # Chunked prefill admission (None = monolithic; see class docstring
         # and docs/serving_internals.md "Admission & scheduling").
         if prefill_chunk == "auto":
@@ -249,16 +289,36 @@ class ElasticEngine:
         self._kv_total_pages = \
             cache_shape["blocks"][0]["k_pages"].shape[1] \
             if kv_layout == "paged" else 0
+        # KV tokens one decode read spans per live slot under the GATHER
+        # path (the whole logical view); the kernel path reads only
+        # ceil(cache_len/page)*page of it, accounted per tick in generate().
+        if kv_layout == "paged":
+            self._attn_read_span = \
+                cache_shape["block_table"].shape[1] * kv_page_size
+        else:
+            self._attn_read_span = self.max_len + api.cfg.vision_tokens
         # Per-slot RNG: reseeded from (engine key, rid) at admission.
         self._key = jax.random.PRNGKey(seed)
         self._slot_keys = jax.random.split(self._key, self.slots)
         self._prefill_traces = 0     # host-side compile counter (bucketing)
         # Jitted entry points. Dense and packed trees have different pytree
-        # structures, so jit caches one executable per cached format.
-        self._dense_step = jax.jit(api.serve_step)
+        # structures, so jit caches one executable per cached format. The
+        # decode steps bake attn_impl in at build time (same rationale as
+        # `fused`: no stale-jit-cache hazards from flipping a global); the
+        # prefill entry points are attn_impl-independent.
+        if self.attn_impl == "gather":
+            step_api = api
+        else:
+            if api.with_serving is None:
+                raise ValueError(
+                    f"model family {api.cfg.family!r} cannot rebuild its "
+                    f"serving entry points with attn_impl={attn_impl!r}")
+            step_api = api.with_serving(attn_impl=self.attn_impl)
+        self._dense_step = jax.jit(step_api.serve_step)
         self._dense_prefill_slot = jax.jit(self._counting(api.prefill_slot))
         self._packed_step = jax.jit(
-            make_packed_serve_step(api, self._block_size, fused=self.fused))
+            make_packed_serve_step(api, self._block_size, fused=self.fused,
+                                   attn_impl=self.attn_impl))
         self._packed_prefill_slot = jax.jit(self._counting(
             make_packed_prefill_slot(api, self._block_size,
                                      fused=self.fused)))
@@ -570,6 +630,28 @@ class ElasticEngine:
             tokens = nxt[:, None].astype(jnp.int32)
             self._ticks += 1
 
+            # Attention-read accounting for the tick that just ran. Every
+            # batch row is processed (free/mid-prefill slots are masked, not
+            # removed): gather (and the dense layout) materializes the full
+            # logical span for ALL rows; the kernel walks pages_read(...)
+            # distinct pages (kernels/paged_attention.py — the one home of
+            # that clamp arithmetic) for rows with mapped pages — decoding
+            # slots at slot_len+1, the mid-prefill slot at its cursor+1 —
+            # and a single clamped-revisit scratch page for zeroed rows
+            # (every walk step maps to page 0, so Pallas elides the repeats).
+            window = self.api.cfg.sliding_window
+            for i in range(b):
+                if not (paged and self.attn_impl == "paged_kernel"):
+                    self._attn_tokens_read += self._attn_read_span
+                elif active[i] is not None:
+                    self._attn_tokens_read += \
+                        pages_read(slot_len[i] + 1, ps, window) * ps
+                elif filling is not None and i == fill_slot:
+                    self._attn_tokens_read += \
+                        pages_read(fill_cursor + 1, ps, window) * ps
+                else:
+                    self._attn_tokens_read += ps
+
             # ---- retire: ONE host transfer per tick drains every slot
             drained = np.asarray(nxt)
             for i, r in enumerate(active):
@@ -671,4 +753,10 @@ class ElasticEngine:
             "kv_pages_alloc": self._kv_pages_alloc,
             "kv_pages_freed": self._kv_pages_freed,
             "kv_pages_hwm": self._kv_pages_hwm,
+            "attn_impl": self.attn_impl,
+            "attn_tokens_read": self._attn_tokens_read,
+            "attn_read_bytes": self._attn_tokens_read
+            * self._attn_layers * 2 * self.api.cfg.n_kv_heads
+            * self.api.cfg.hd
+            * jnp.dtype(self.api.cfg.compute_dtype).itemsize,
         }

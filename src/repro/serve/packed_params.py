@@ -258,28 +258,52 @@ def make_packed_fn(api, fn, block_size: int = 32):
     return wrapped
 
 
-def _fused_api(api, block_size: int):
+def _fused_api(api, block_size: int, attn_impl: str = "gather"):
     """A ModelApi clone whose serving entry points run packed leaves through
-    the fused Pallas dequant-GEMM dispatch (``kernels.dispatch.qmatmul``)."""
+    the fused Pallas dequant-GEMM dispatch (``kernels.dispatch.qmatmul``),
+    with the paged decode-attention path (``attn_impl``) baked in."""
     if api.with_qmm is None:
         raise ValueError(
             f"model family {api.cfg.family!r} has no qmm hook; use the "
             "densify path (fused=False)")
     from repro.kernels.dispatch import make_qmm
-    return api.with_qmm(make_qmm(block_size=block_size, mode="pallas"))
+    qmm = make_qmm(block_size=block_size, mode="pallas")
+    if api.with_serving is not None:
+        return api.with_serving(qmm=qmm, attn_impl=attn_impl)
+    if attn_impl != "gather":
+        raise ValueError(
+            f"model family {api.cfg.family!r} cannot rebuild its serving "
+            f"entry points with attn_impl={attn_impl!r} (no with_serving)")
+    return api.with_qmm(qmm)
+
+
+def _attn_api(api, attn_impl: str):
+    """``api`` rebuilt (if needed) so serve_step uses ``attn_impl``."""
+    if api.attn_impl == attn_impl:
+        return api
+    if api.with_serving is None:
+        raise ValueError(
+            f"model family {api.cfg.family!r} cannot rebuild its serving "
+            f"entry points with attn_impl={attn_impl!r} (no with_serving)")
+    return api.with_serving(attn_impl=attn_impl)
 
 
 def make_packed_serve_step(api, block_size: int = 32, *,
-                           fused: bool = False):
+                           fused: bool = False, attn_impl: str = "gather"):
     """serve_step over packed params (the roofline-optimized decode path).
 
     ``fused=True`` returns a step where each projection calls the Pallas
     dequant-GEMM on its packed leaf (interpret-mode off TPU); ``fused=False``
     keeps the XLA densify-inside-jit contract. Both take the same packed
-    pytree and produce the same logits (same codes).
+    pytree and produce the same logits (same codes). ``attn_impl`` picks the
+    paged decode-attention read path — the gather-free block-table kernel
+    (``"paged_kernel"``) vs gather + masked softmax (``"gather"``) — and is
+    orthogonal to the weight contract: any (fused, attn_impl) pairing is a
+    valid serving configuration with identical token streams.
     """
     if fused:
-        return _fused_api(api, block_size).serve_step
+        return _fused_api(api, block_size, attn_impl).serve_step
+    api = _attn_api(api, attn_impl)
     return make_packed_fn(api, api.serve_step, block_size)
 
 
