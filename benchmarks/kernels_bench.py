@@ -159,6 +159,26 @@ def smoke():
     assert pattn.stats()["fallback"] >= 1
     np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
     print(f"smoke paged_attention: pallas path live, parity ok ({st})")
+
+    # Multi-query paged attention (the mixed prefill+decode tick): the MQ
+    # kernel must be the traced path under mode="pallas" and must match the
+    # gather + masked-softmax fallback on ragged query spans — one chunk row
+    # straddling a page boundary, one decode row.
+    c = 8
+    qm = jnp.asarray(rng.normal(size=(b, c, hkv * g, d)), jnp.float32)
+    qo = jnp.asarray([7, 23], jnp.int32)     # row 0: chunk at cursor 7
+    ql = jnp.asarray([8, 1], jnp.int32)      # row 1: plain decode
+    pattn.reset_stats()
+    got = np.asarray(pattn.paged_mixed_attention(qm, kp, vp, bt, qo, ql,
+                                                 mode="pallas"))
+    st = pattn.stats()
+    assert st["pallas_mq"] >= 1 and st["fallback_mq"] == 0, (
+        f"mixed paged attention regressed to the gather fallback: {st}")
+    ref = np.asarray(pattn.paged_mixed_attention(qm, kp, vp, bt, qo, ql,
+                                                 mode="fallback"))
+    assert pattn.stats()["fallback_mq"] >= 1
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    print(f"smoke paged_attention_mq: pallas path live, parity ok ({st})")
     print("smoke: OK")
 
 

@@ -41,6 +41,17 @@ the XLA densify-inside-jit fallback (``densify``) — and reports one table:
     work to one chunk, so the decode-stall tail collapses while token
     streams stay BIT-IDENTICAL — the bench verifies that identity and
     prints it.
+  - decode_occupancy / tick_exec / adm_decode_tpt: the unified-tick
+    columns, from the engine's per-tick ``rows`` / ``decode_rows`` /
+    ``execs`` counters. ``decode_occupancy`` is the fraction of dispatched
+    batch rows that were live decoders; ``tick_exec`` the mean executables
+    per work tick — 1.0 under ``scheduler="mixed"`` (the chunk rides the
+    decode batch), up to 2.0 under ``"sequential"`` (chunk then decode);
+    ``adm_decode_tpt`` the decode tokens per tick over ticks that carried
+    prefill work — the "decode does not starve during a long admission"
+    number, comparable against the monolithic baseline rows. The chunked
+    rows run BOTH schedulers and the bench verifies their token streams
+    are bit-identical, same as the cross-admission check.
 
 CPU wall-clock is reported for completeness but is NOT the serving claim —
 off-TPU the fused path runs the Pallas interpreter (slow, correctness-only)
@@ -78,7 +89,7 @@ def _pct(xs, q):
 def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
                n_requests, max_new, vocab, kv_layout="dense", page_size=8,
                admission="monolithic", prefill_chunk=8, long_every=3,
-               long_len=40, attn_impl="gather"):
+               long_len=40, attn_impl="gather", scheduler="sequential"):
     kv_kw = {}
     if kv_layout == "paged":
         # Size the pool to the workload's live-token demand (longest prompt
@@ -92,6 +103,7 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
         api, anchor, batch_slots=slots, max_len=max_len,
         param_template=params, fused=fused,
         prefill_chunk=prefill_chunk if admission == "chunked" else None,
+        scheduler=scheduler if admission == "chunked" else None,
         **kv_kw)
     rng = np.random.default_rng(0)
     # every long_every-th request is long (long_every=1 => all long); the
@@ -120,6 +132,8 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
     tpt = toks / max(ticks, 1)
     ttfts = [r.ttft_s for r in reqs[WARMUP:]]
     stalls = [t["wall_s"] for t in eng.tick_trace if t["decode"]]
+    work = [t for t in eng.tick_trace if t["rows"] > 0]
+    adm = [t for t in eng.tick_trace if t["prefill_tokens"] > 0]
     return {
         "fmt": fmt,
         "path": ("fused" if fused else "densify") if fmt != "bf16"
@@ -129,6 +143,14 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
         "attn_bytes_per_token": (st["attn_read_bytes"] - attn0)
         / max(toks, 1),
         "admission": admission,
+        "scheduler": eng.scheduler,
+        "decode_occupancy": sum(t["decode_rows"] for t in work)
+        / max(sum(t["rows"] for t in work), 1),
+        "tick_exec": sum(t["execs"] for t in work) / max(len(work), 1),
+        "adm_decode_tpt": sum(t["decode_rows"] for t in adm)
+        / max(len(adm), 1),
+        "adm_decode_tps": sum(t["decode_rows"] for t in adm)
+        / max(sum(t["wall_s"] for t in adm), 1e-9),
         "containers": "+".join(st["containers"][fmt]),
         "weight_bytes": wbytes,
         "ticks": ticks,
@@ -168,6 +190,11 @@ def main():
                     choices=("both", "gather", "paged_kernel"),
                     help="paged decode-attention impl(s) to benchmark "
                          "(paged rows only; dense KV has no block table)")
+    ap.add_argument("--scheduler", default="both",
+                    choices=("both", "sequential", "mixed"),
+                    help="chunked-tick scheduler(s) to benchmark "
+                         "(chunked rows only; monolithic admission has no "
+                         "chunk to coalesce)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunk size for the chunked admission rows "
                          "(default: one KV page, min 8)")
@@ -199,48 +226,54 @@ def main():
         else (args.admission,)
     attns = ("gather", "paged_kernel") if args.attn == "both" \
         else (args.attn,)
+    schedulers = ("sequential", "mixed") if args.scheduler == "both" \
+        else (args.scheduler,)
     rows = []
     for adm in admissions:
-        for kv in layouts:
-            for attn in (attns if kv == "paged" else ("gather",)):
-                for fmt in FORMATS:
-                    if fmt == "bf16":  # dense pseudo-format: one path
-                        rows.append(bench_path(api, anchor, params, fmt,
-                                               False, kv_layout=kv,
-                                               admission=adm,
-                                               attn_impl=attn, **kw))
-                        continue
-                    if want_fused:
-                        rows.append(bench_path(api, anchor, params, fmt,
-                                               True, kv_layout=kv,
-                                               admission=adm,
-                                               attn_impl=attn, **kw))
-                    if want_dense:
-                        rows.append(bench_path(api, anchor, params, fmt,
-                                               False, kv_layout=kv,
-                                               admission=adm,
-                                               attn_impl=attn, **kw))
+        for sched in (schedulers if adm == "chunked" else ("sequential",)):
+            for kv in layouts:
+                for attn in (attns if kv == "paged" else ("gather",)):
+                    for fmt in FORMATS:
+                        if fmt == "bf16":  # dense pseudo-format: one path
+                            rows.append(bench_path(
+                                api, anchor, params, fmt, False,
+                                kv_layout=kv, admission=adm,
+                                attn_impl=attn, scheduler=sched, **kw))
+                            continue
+                        if want_fused:
+                            rows.append(bench_path(
+                                api, anchor, params, fmt, True,
+                                kv_layout=kv, admission=adm,
+                                attn_impl=attn, scheduler=sched, **kw))
+                        if want_dense:
+                            rows.append(bench_path(
+                                api, anchor, params, fmt, False,
+                                kv_layout=kv, admission=adm,
+                                attn_impl=attn, scheduler=sched, **kw))
 
     base = next(r for r in rows if r["fmt"] == "bf16")
     # KV ratios are vs the DENSE layout; without a dense row (--kv paged)
     # there is no baseline to compare against, so print n/a rather than a
     # misleading same-layout 1.00x.
     kv_base = next((r for r in rows if r["kv"] == "dense"), None)
-    print("fmt,path,kv,attn,admission,containers,weight_bytes,ticks,tokens,"
-          "tokens_per_tick,weight_bytes_per_token,bytes_cut_vs_bf16,"
-          "kv_bytes_per_slot,kv_cut_vs_dense,attn_bytes_per_token,"
+    print("fmt,path,kv,attn,admission,scheduler,containers,weight_bytes,"
+          "ticks,tokens,tokens_per_tick,weight_bytes_per_token,"
+          "bytes_cut_vs_bf16,kv_bytes_per_slot,kv_cut_vs_dense,"
+          "attn_bytes_per_token,decode_occupancy,tick_exec,adm_decode_tpt,"
           "ttft_p50_ms,ttft_p99_ms,stall_p99_ms,max_pf_tok,wall_s")
     for r in rows:
         cut = base["weight_bytes_per_token"] / r["weight_bytes_per_token"]
         kv_cut = "n/a" if kv_base is None else \
             f"{kv_base['kv_bytes_per_slot'] / max(r['kv_bytes_per_slot'], 1):.2f}x"
         print(f"{r['fmt']},{r['path']},{r['kv']},{r['attn']},"
-              f"{r['admission']},{r['containers']},"
+              f"{r['admission']},{r['scheduler']},{r['containers']},"
               f"{r['weight_bytes']},{r['ticks']},{r['tokens']},"
               f"{r['tokens_per_tick']:.2f},"
               f"{r['weight_bytes_per_token']:.0f},{cut:.2f}x,"
               f"{r['kv_bytes_per_slot']},{kv_cut},"
               f"{r['attn_bytes_per_token']:.0f},"
+              f"{r['decode_occupancy']:.2f},{r['tick_exec']:.2f},"
+              f"{r['adm_decode_tpt']:.2f},"
               f"{r['ttft_p50_ms']:.1f},{r['ttft_p99_ms']:.1f},"
               f"{r['stall_p99_ms']:.1f},{r['max_pf_tok']},"
               f"{r['wall_s']:.2f}")
@@ -252,8 +285,8 @@ def main():
         for r in rows:
             if r["kv"] != "paged":
                 continue
-            keyed.setdefault((r["fmt"], r["path"], r["admission"]),
-                             {})[r["attn"]] = r
+            keyed.setdefault((r["fmt"], r["path"], r["admission"],
+                              r["scheduler"]), {})[r["attn"]] = r
         pairs = [p for p in keyed.values() if len(p) == 2]
         identical = all(p["gather"]["streams"] == p["paged_kernel"]["streams"]
                         for p in pairs)
@@ -269,10 +302,38 @@ def main():
             raise SystemExit("token streams diverged between attention "
                              "impls — the paged kernel broke bit-identity")
 
-    if len(admissions) == 2:
-        # The chunked-admission contract: same tokens, smaller stall tail.
+    if len(schedulers) == 2 and "chunked" in admissions:
+        # The unified-tick contract: coalescing the chunk into the decode
+        # batch is a pure re-scheduling — same tokens, ~1 executable/tick.
         keyed = {}
         for r in rows:
+            if r["admission"] != "chunked":
+                continue
+            keyed.setdefault((r["fmt"], r["path"], r["kv"], r["attn"]),
+                             {})[r["scheduler"]] = r
+        pairs = [p for p in keyed.values() if len(p) == 2]
+        identical = all(p["sequential"]["streams"] == p["mixed"]["streams"]
+                        for p in pairs)
+        s_exec = _pct([p["sequential"]["tick_exec"] for p in pairs], 0.5)
+        m_exec = _pct([p["mixed"]["tick_exec"] for p in pairs], 0.5)
+        print(f"# mixed vs sequential: token streams identical across all "
+              f"configs = {identical}; median executables/tick "
+              f"{s_exec:.2f} -> {m_exec:.2f}")
+        if not identical:
+            raise SystemExit("token streams diverged between schedulers — "
+                             "the mixed tick broke bit-identity")
+
+    if len(admissions) == 2:
+        # The chunked-admission contract: same tokens, smaller stall tail,
+        # and decode throughput during a long admission no worse than the
+        # monolithic baseline. One scheduler's chunked rows suffice — the
+        # cross-scheduler check above pins mixed == sequential.
+        keyed = {}
+        adm_sched = "sequential" if "sequential" in schedulers \
+            else schedulers[0]
+        for r in rows:
+            if r["admission"] == "chunked" and r["scheduler"] != adm_sched:
+                continue
             keyed.setdefault((r["fmt"], r["path"], r["kv"], r["attn"]),
                              {})[r["admission"]] = r
         identical = all(p["monolithic"]["streams"] == p["chunked"]["streams"]
@@ -281,9 +342,21 @@ def main():
         mono_stall = _pct([p["monolithic"]["stall_p99_ms"] for p in pairs],
                           0.5)
         chnk_stall = _pct([p["chunked"]["stall_p99_ms"] for p in pairs], 0.5)
+        mono_adm = _pct([p["monolithic"]["adm_decode_tpt"] for p in pairs],
+                        0.5)
+        chnk_adm = _pct([p["chunked"]["adm_decode_tpt"] for p in pairs], 0.5)
+        mono_tps = _pct([p["monolithic"]["adm_decode_tps"] for p in pairs],
+                        0.5)
+        chnk_tps = _pct([p["chunked"]["adm_decode_tps"] for p in pairs], 0.5)
+        # tokens/tick alone flatters monolithic: its one admission tick
+        # counts the freshly admitted slots' first decodes while stalling
+        # everything for the whole prompt — the per-second number is the
+        # decode throughput running slots actually see during an admission.
         print(f"# chunked vs monolithic: token streams identical across all "
               f"configs = {identical}; median stall_p99 "
-              f"{mono_stall:.1f}ms -> {chnk_stall:.1f}ms")
+              f"{mono_stall:.1f}ms -> {chnk_stall:.1f}ms; decode during "
+              f"admission {mono_adm:.2f} -> {chnk_adm:.2f} tokens/tick, "
+              f"{mono_tps:.0f} -> {chnk_tps:.0f} tokens/s")
         if not identical:
             raise SystemExit("token streams diverged between admission "
                              "modes — chunked prefill broke bit-identity")

@@ -56,6 +56,11 @@ def main():
                     choices=("gather", "paged_kernel"),
                     help="paged decode-attention read path (default: "
                          "kernel on TPU, gather elsewhere)")
+    ap.add_argument("--scheduler", default=None,
+                    choices=("sequential", "mixed"),
+                    help="chunked-tick scheduler: 'mixed' (default with "
+                         "--prefill-chunk) coalesces the chunk into the "
+                         "decode batch — one executable per tick")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -75,6 +80,7 @@ def main():
                         kv_layout="paged", kv_page_size=8,
                         attn_impl=args.attn_impl,
                         prefill_chunk=args.prefill_chunk,
+                        scheduler=args.scheduler,
                         kv_num_pages=4 * (7 if chunked else 3) + 1)
     #   pool is live-token sized, not slots*max_len — pages recycle across
     #   the burst (the chunked demo's long prompts need more live pages)
@@ -98,6 +104,9 @@ def main():
         stalled = sum(1 for t in tt if t["decode"] and t["prefill_tokens"])
         print(f"  {stalled} ticks interleaved a prefill chunk with the "
               "running slots' decode step")
+        print(f"  scheduler={eng.scheduler}: max executables in any tick = "
+              f"{max(t['execs'] for t in tt)} (mixed coalesces chunk + "
+              "decode into one mixed_step; sequential runs two)")
         for r in reqs:
             print(f"  req {r.rid}: plen={r.prompt.size} ttft={r.ttft_s:.3f}s"
                   f" n_out={len(r.out_tokens)}")

@@ -30,6 +30,16 @@ decode always appends before attending).
 GQA (``Hkv != H``) runs natively: queries fold to (Hkv, G, D) and every
 reduction stays per-kv-head, matching ``decode_attention``.
 
+The multi-query variant (``paged_attention_pallas_mq``) generalizes the
+grid to (slot, q block, logical KV block) for the unified mixed
+prefill+decode tick: each row carries a ragged span of ``q_len`` queries at
+cursor ``q_offset`` (decode rows 1, the mid-prefill row a whole chunk), the
+causal mask is per query lane (``pos <= q_offset + i``), and the same
+clamped block-table walk bounds DMA to the pages each q block's live lanes
+can see (``pages_read_mq``). It subsumes the single-query kernel
+(``q_len == 1`` rows cost and compute identically) and retires the
+gather-based chunked-prefill read path on TPU.
+
 Dispatch (mirroring kernels/dispatch.py): ``paged_decode_attention`` is the
 serving entry point. Mode "pallas" runs this kernel — Mosaic on TPU,
 interpret-mode elsewhere (the test/CI correctness path); mode "fallback"
@@ -54,7 +64,8 @@ from jax.experimental.pallas import tpu as pltpu
 # ---------------------------------------------------------------------------
 MODES = ("auto", "pallas", "fallback")
 
-_stats: Dict[str, int] = {"pallas": 0, "fallback": 0}
+_stats: Dict[str, int] = {"pallas": 0, "fallback": 0,
+                          "pallas_mq": 0, "fallback_mq": 0}
 
 
 def stats() -> Dict[str, int]:
@@ -97,6 +108,22 @@ def pages_read(length: int, page_size: int,
     if window is not None:
         pages -= min(max((length - window) // page_size, 0), pages - 1)
     return pages
+
+
+def pages_read_mq(q_offset: int, q_len: int, page_size: int,
+                  window: Optional[int] = None) -> int:
+    """Distinct pages the multi-query walk DMAs for one row whose ``q_len``
+    queries sit at positions ``q_offset .. q_offset + q_len - 1`` — the
+    host-side mirror of the MQ ``kv_index`` clamp below (single q block).
+    The highest query attends up to ``q_offset + q_len`` positions; the
+    lowest query's window lower-bounds the walk. ``q_len == 1`` collapses
+    to ``pages_read(q_offset + 1, ...)`` — decode rows in a mixed batch
+    cost exactly what they cost in the single-query kernel."""
+    last = max(-(-(q_offset + q_len) // page_size) - 1, 0)
+    first = 0
+    if window is not None:
+        first = min(max((q_offset + 1 - window) // page_size, 0), last)
+    return last - first + 1
 
 
 # ---------------------------------------------------------------------------
@@ -226,6 +253,147 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Multi-query extension: ragged rows of a mixed prefill+decode batch
+# ---------------------------------------------------------------------------
+def _paged_attn_mq_kernel(bt_ref, qo_ref, ql_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *,
+                          page_size: int, window: Optional[int],
+                          hkv: int, g: int, tq: int):
+    """One (slot, q-block, logical-KV-block) grid step.
+
+    The q_len==1 kernel above with a query axis: each slot carries ``tq``
+    query lanes per q block; lane ``i`` of block ``qi`` sits at logical
+    position ``q_offset + qi*tq + i`` and is live iff ``qi*tq + i < q_len``.
+    Scratch persists across the j-minor KV walk of one (slot, q block);
+    masking stays total (scores -inf'd before the max, p re-zeroed after the
+    exp, V rows zeroed) so poisoned pages and the garbage under dead query
+    lanes never reach the reduction. Unlike the single-query kernel, a page
+    the walk visits can be live for some lanes and dead for others, so the
+    running max is per-lane and the carry ``alpha`` needs the
+    ``m == -inf`` guard (exp(-inf - -inf) would NaN a lane that has not
+    seen a valid position yet).
+    """
+    b = pl.program_id(0)
+    qi = pl.program_id(1)
+    j = pl.program_id(2)
+    mp = pl.num_programs(2)
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_offset = qo_ref[b]
+    q_len = ql_ref[b]
+    live = q_offset + q_len                 # KV frontier after this tick
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]
+    qidx = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0)[:, 0]
+    qpos = q_offset + qidx
+    # (tq, ps): causal self-inclusive, clipped at the frontier, windowed,
+    # and dead for pad lanes past q_len.
+    mask = (pos[None, :] <= qpos[:, None]) & (pos[None, :] < live)
+    mask &= (qidx < q_len)[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - pos[None, :] < window
+    vvalid = pos < live
+
+    @pl.when(jnp.any(mask))
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32).reshape(tq, hkv, g, d)
+        k = k_ref[0].astype(jnp.float32)             # (ps, Hkv, D)
+        s = jnp.einsum("qkgd,tkd->kgqt", q, k) * scale
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_prev = m_ref[...]                          # (Hkv, G, tq)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(jnp.where(m_new > -jnp.inf, m_prev - m_new, 0.0))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        v = jnp.where(vvalid[:, None, None],
+                      v_ref[0].astype(jnp.float32), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            jnp.einsum("kgqt,tkd->kgqd", p, v)
+        m_ref[...] = m_new
+
+    @pl.when(j == mp - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.where(l[..., None] > 0, out, 0.0)   # dead lanes -> zeros
+        o_ref[0] = out.transpose(2, 0, 1, 3).reshape(
+            tq, hkv * g, d).astype(o_ref.dtype)
+
+
+def paged_attention_pallas_mq(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, block_table: jax.Array,
+                              q_offset: jax.Array, q_len: jax.Array, *,
+                              window: Optional[int] = None,
+                              tq: Optional[int] = None,
+                              interpret: bool = False) -> jax.Array:
+    """Ragged multi-query attention off the page pool: (B, C, H, D) f32.
+
+    q (B, C, H, D) — row b's query ``i`` sits at logical position
+    ``q_offset[b] + i`` and is live iff ``i < q_len[b]`` (decode rows carry
+    C-1 dead pad lanes; the mid-prefill row is mostly live). The pool must
+    already hold each row's new K/V at those positions. ``tq`` is the q
+    block size (defaults to C — one block; must divide C); the KV walk per
+    (row, q block) is clamped to the pages that block's live queries can
+    see, so DMA cost follows ``pages_read_mq``, and dead q blocks collapse
+    to one elided page. Dead lanes output exact zeros.
+    """
+    b, c, h, d = q.shape
+    ps = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    mp = block_table.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    tq = c if tq is None else tq
+    assert c % tq == 0, (c, tq)
+    nq = c // tq
+
+    def kv_index(bi, qi, j, bt, qo, ql):
+        # Clamp the walk to [first in-window page of the block's lowest
+        # query, last page its highest LIVE query can see]; out-of-range
+        # steps revisit a live page and Pallas elides the repeat DMA.
+        hi = qo[bi] + jnp.minimum((qi + 1) * tq, ql[bi])
+        last = jnp.maximum(pl.cdiv(hi, ps) - 1, 0)
+        jc = jnp.minimum(j, last)
+        if window is not None:
+            first = jnp.clip((qo[bi] + qi * tq + 1 - window) // ps, 0, last)
+            jc = jnp.maximum(jc, first)
+        return (bt[bi, jc], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, nq, mp),
+        in_specs=[
+            pl.BlockSpec((1, tq, h, d),
+                         lambda bi, qi, j, bt, qo, ql: (bi, qi, 0, 0)),
+            pl.BlockSpec((1, ps, hkv, d), kv_index),
+            pl.BlockSpec((1, ps, hkv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, tq, h, d),
+                               lambda bi, qi, j, bt, qo, ql: (bi, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g, tq), jnp.float32),     # running max
+            pltpu.VMEM((hkv, g, tq), jnp.float32),     # running sum-exp
+            pltpu.VMEM((hkv, g, tq, d), jnp.float32),  # running PV acc
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attn_mq_kernel, page_size=ps, window=window,
+                          hkv=hkv, g=g, tq=tq),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, h, d), jnp.float32),
+        interpret=interpret,
+    )(block_table, q_offset, q_len, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
 # Serving dispatch shim
 # ---------------------------------------------------------------------------
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
@@ -259,3 +427,40 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     return decode_attention(q, paged_gather(k_pages, block_table),
                             paged_gather(v_pages, block_table),
                             cache_len, window=window)
+
+
+def paged_mixed_attention(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, block_table: jax.Array,
+                          q_offset: jax.Array, q_len: jax.Array, *,
+                          window: Optional[int] = None,
+                          mode: Optional[str] = None,
+                          tq: Optional[int] = None) -> jax.Array:
+    """Mixed-batch attention: ragged q (B, C, H, D) over the page pool.
+
+    The multi-query counterpart of ``paged_decode_attention`` and the entry
+    point ``attention_block``'s mixed branch routes through — one call
+    serves the whole unified tick: decode rows at ``q_len == 1``, the
+    mid-prefill row at its chunk width, pad lanes dead. ``mode``:
+
+      "pallas"    the gather-free MQ kernel above (Mosaic on TPU, interpret
+                  elsewhere). ``attn_impl="paged_kernel"`` — this retires
+                  the gather-based chunked-prefill read path on TPU.
+      "fallback"  ``paged_gather`` + masked ``mixed_attention`` — the
+                  materialize-then-attend pair. ``attn_impl="gather"``.
+      "auto"/None "pallas" on TPU, "fallback" elsewhere.
+
+    The pool must already hold each row's new K/V (callers write through
+    ``paged_mixed_update`` first); dead lanes output exact zeros on both
+    paths.
+    """
+    if resolve_mode(mode) == "pallas":
+        _stats["pallas_mq"] += 1
+        out = paged_attention_pallas_mq(q, k_pages, v_pages, block_table,
+                                        q_offset, q_len, window=window,
+                                        tq=tq, interpret=_interpret())
+        return out.astype(q.dtype)
+    _stats["fallback_mq"] += 1
+    from repro.models.layers import mixed_attention, paged_gather
+    return mixed_attention(q, paged_gather(k_pages, block_table),
+                           paged_gather(v_pages, block_table),
+                           q_offset, q_len, window=window)

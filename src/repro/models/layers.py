@@ -166,6 +166,48 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def mixed_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    q_offset: jax.Array, q_len: jax.Array,
+                    window: Optional[int] = None) -> jax.Array:
+    """Ragged multi-query attention: q (B,C,H,D) over cache (B,Skv,Hkv,D).
+
+    The multi-query generalization of ``decode_attention`` for the unified
+    mixed prefill+decode tick: query ``i`` of row ``b`` sits at logical
+    position ``q_offset[b] + i``; lanes with ``i < q_len[b]`` attend
+    causally (self-inclusive, so each query sees its own just-written K/V)
+    over positions below the row's frontier ``q_offset + q_len``, within
+    the sliding window; dead pad lanes output exact zeros. Deliberately the
+    same op sequence as ``decode_attention`` (einsum / mask / max / exp /
+    sum / div) with one extra query axis, so a ``q_len == 1`` row's output
+    stays bit-identical to the single-query path on this backend — the
+    mixed-vs-sequential stream-identity contract rests on that.
+    """
+    b, c, h, d = q.shape
+    skv, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, c, hkv, g, d)
+    s = jnp.einsum("bikgd,btkd->bkgit", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / (d ** 0.5)
+    pos = jnp.arange(skv)
+    qpos = q_offset[:, None] + jnp.arange(c)[None]               # (B, C)
+    live = jnp.arange(c)[None] < q_len[:, None]                  # (B, C)
+    valid = pos[None, None, :] <= qpos[:, :, None]               # (B, C, Skv)
+    valid &= pos[None, None, :] < (q_offset + q_len)[:, None, None]
+    valid &= live[..., None]
+    if window is not None:
+        valid &= (qpos[:, :, None] - pos[None, None, :]) < window
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    den = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgit,btkd->bikgd", p / den,
+                     v_cache.astype(jnp.float32))
+    # Dead lanes divide 0/0 -> NaN; force the kernel's exact-zeros contract
+    # (live lanes always have >= 1 valid position: their own).
+    out = jnp.where(live[..., None, None, None], out, 0.0)
+    return out.reshape(b, c, h, d).astype(q.dtype)
+
+
 # =============================================================================
 # Paged KV cache (block-table indirection over a shared page pool)
 # =============================================================================
@@ -224,6 +266,53 @@ def paged_decode_append(pool: jax.Array, kv_tok: jax.Array,
     return pool.at[phys, cache_len % ps].set(kv_tok[:, 0].astype(pool.dtype))
 
 
+def mixed_cache_update(cache: jax.Array, kv_new: jax.Array,
+                       cache_len: jax.Array, q_len: jax.Array) -> jax.Array:
+    """Ragged multi-token append into a dense cache (B, Smax, Hkv, D).
+
+    Row ``b``'s token ``i`` of ``kv_new`` (B, C, Hkv, D) lands at position
+    ``cache_len[b] + i`` when ``i < q_len[b]``; pad lanes scatter out of
+    bounds and are dropped. NOT ``dynamic_update_slice`` — that clamps the
+    *start* index, so a width-C write for a decode row near capacity would
+    slide backwards onto live positions; per-token drop semantics can
+    never do that.
+    """
+    b, c = kv_new.shape[:2]
+    smax = cache.shape[1]
+    idx = cache_len[:, None] + jnp.arange(c)[None]
+    idx = jnp.where(jnp.arange(c)[None] < q_len[:, None], idx, smax)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, c))
+    return cache.at[bidx, idx].set(kv_new.astype(cache.dtype), mode="drop")
+
+
+def paged_mixed_update(pool: jax.Array, kv_new: jax.Array,
+                       block_table: jax.Array, cache_len: jax.Array,
+                       q_len: jax.Array) -> jax.Array:
+    """Ragged multi-token append through the block table.
+
+    Position ``cache_len[b] + i`` (``i < q_len[b]``) maps to page
+    ``block_table[b, pos // ps]``, offset ``pos % ps``; pad lanes and
+    positions past the table redirect to scratch page 0 with zero values
+    (collisions there are harmless — every read of page 0 is masked). The
+    engine maps each row's pages before the tick (decode rows at page
+    boundaries, the mid-prefill row per chunk), so valid writes always
+    land on live pages, which are disjoint across slots. Unlike
+    ``paged_prefill_update`` the final-chunk page tail is NOT zero-filled:
+    garbage past the frontier stays finite-or-masked, the same invariant
+    recycled pages already rely on.
+    """
+    ps = pool.shape[1]
+    mp = block_table.shape[1]
+    c = kv_new.shape[1]
+    pos = cache_len[:, None] + jnp.arange(c)[None]               # (B, C)
+    valid = jnp.arange(c)[None] < q_len[:, None]
+    blk = jnp.clip(pos // ps, 0, mp - 1)
+    phys = jnp.take_along_axis(block_table, blk, axis=1)
+    phys = jnp.where(valid & (pos // ps < mp), phys, 0)
+    vals = jnp.where(valid[..., None, None], kv_new.astype(pool.dtype), 0)
+    return pool.at[phys, pos % ps].set(vals)
+
+
 def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     """Materialize each slot's logical KV view: (B, max_pages*ps, Hkv, D).
 
@@ -256,6 +345,7 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
                     causal: bool = True,
                     block_table: Optional[jax.Array] = None,
                     chunk_start: Optional[jax.Array] = None,
+                    q_len: Optional[jax.Array] = None,
                     attn_impl: str = "gather"):
     """Self- (or cross-) attention. Returns (out, new_kv) where new_kv is the
     (k, v) tensors produced at this layer (for cache building) or the updated
@@ -277,7 +367,17 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
     over the whole cache with ``q_offset=chunk_start`` — the causal mask
     exposes exactly positions ``< chunk_start + S`` (everything this
     request's earlier chunks wrote, plus the chunk itself; stale data from a
-    slot's previous occupant only ever sits at higher positions)."""
+    slot's previous occupant only ever sits at higher positions).
+
+    With ``q_len`` set (the unified mixed prefill+decode tick; see
+    docs/serving_internals.md §6), ``x`` is a ragged (B, C) batch: row
+    ``b``'s first ``q_len[b]`` tokens are real and sit at positions
+    ``cache_len[b] + i`` — decoding rows carry 1, the mid-prefill row its
+    chunk. Each row's valid K/V are written at its own cursor (through the
+    block table when paged), pad lanes are dropped, and attention runs the
+    ragged multi-query path: ``mixed_attention`` on dense/gather,
+    ``paged_mixed_attention`` (the MQ Pallas kernel) under
+    ``attn_impl="paged_kernel"``."""
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
@@ -320,6 +420,26 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
         out = flash_attention(q, k_view, v_view, causal=True,
                               window=cfg.sliding_window,
                               q_offset=chunk_start, chunk=cfg.seq_chunk)
+        new_kv = (kc, vc)
+    elif kv_cache is not None and q_len is not None:
+        # mixed prefill+decode tick: every row writes its q_len valid tokens
+        # at its own cache_len cursor, then its queries attend causally at
+        # that offset — decode rows and the mid-prefill chunk in ONE
+        # executable.
+        kc, vc = kv_cache
+        if block_table is not None:
+            from repro.kernels.paged_attention import paged_mixed_attention
+            kc = paged_mixed_update(kc, k, block_table, cache_len, q_len)
+            vc = paged_mixed_update(vc, v, block_table, cache_len, q_len)
+            out = paged_mixed_attention(
+                q, kc, vc, block_table, cache_len, q_len,
+                window=cfg.sliding_window,
+                mode="pallas" if attn_impl == "paged_kernel" else "fallback")
+        else:
+            kc = mixed_cache_update(kc, k, cache_len, q_len)
+            vc = mixed_cache_update(vc, v, cache_len, q_len)
+            out = mixed_attention(q, kc, vc, cache_len, q_len,
+                                  window=cfg.sliding_window)
         new_kv = (kc, vc)
     elif kv_cache is not None and block_table is not None:
         # paged decode: append through the block table, then attend over the

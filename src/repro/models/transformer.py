@@ -205,7 +205,7 @@ def param_axes(cfg: ModelConfig) -> Dict:
 # =============================================================================
 def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
            cache_slice, cache_len, prefill: bool, block_table=None,
-           chunk_start=None, attn_impl: str = "gather"):
+           chunk_start=None, q_len=None, attn_impl: str = "gather"):
     """One block. Returns (x, new_cache_slice).
 
     ``block_table`` (B, max_pages) selects the paged KV layout: attention
@@ -222,13 +222,21 @@ def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
     attention reads back the cache so the chunk sees every earlier chunk.
     Attention-only — recurrent mixers fold the prompt into their state in
     one pass and cannot resume mid-prompt, so they reject loudly.
+
+    ``q_len`` (B,), decode-mode only, selects the unified mixed
+    prefill+decode tick: ``x`` is a ragged (B, C) batch where row ``b``'s
+    first ``q_len[b]`` tokens are real, each sitting at the row's own
+    ``cache_len`` cursor — attention-only, same as chunked prefill (the
+    mid-prefill row resumes mid-prompt).
     """
     mk, fk = mixer_kind(cfg, j), ffn_kind(cfg, j)
     name = f"blk{j}.{mk}"
     chunked = prefill and chunk_start is not None and cache_slice is not None
-    if chunked and mk != "attn":
+    mixed = q_len is not None and not prefill and cache_slice is not None
+    if (chunked or mixed) and mk != "attn":
         raise ValueError(
-            f"chunked prefill requires attention mixers; layer {j} of "
+            f"{'chunked prefill' if chunked else 'the mixed tick'} requires "
+            f"attention mixers; layer {j} of "
             f"family {cfg.family!r} is {mk!r} (its recurrent state cannot "
             "resume mid-prompt) — use monolithic admission")
     new_cache: Dict[str, Any] = {}
@@ -244,6 +252,7 @@ def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
             kv_cache=kv, cache_len=cache_len,
             block_table=block_table if paged else None,
             chunk_start=chunk_start if chunked else None,
+            q_len=q_len if mixed else None,
             attn_impl=attn_impl)
         if cache_slice is not None:
             if chunked:
@@ -308,7 +317,7 @@ def _layer(ctx: QuantCtx, x, p, cfg: ModelConfig, j: int, positions,
 
 def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
                    cache=None, cache_len=None, prefill: bool = False,
-                   chunk_start=None, attn_impl: str = "gather"):
+                   chunk_start=None, q_len=None, attn_impl: str = "gather"):
     """Run the block stack. x (B,S,d). Returns (hidden, new_cache, aux)."""
     # Sequence-parallel residual: the per-group saved activation (the scan
     # carry, which dominates train memory at depth) shards its seq dim over
@@ -330,7 +339,7 @@ def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
             def layer_call(xv_, p_, cs_, _j=j):
                 return _layer(ctx, xv_, p_, cfg, _j, positions, cs_,
                               cache_len, prefill, block_table, chunk_start,
-                              attn_impl)
+                              q_len, attn_impl)
 
             if cfg.remat_inner and cfg.scan_group > 1:
                 layer_call = jax.checkpoint(
@@ -472,6 +481,12 @@ class ModelApi:
     prefill_chunk_slot: Callable = None  # single-slot prefill_chunk:
     #                                (params, batch(1,C), cache, slot,
     #                                start_pos) -> (logits (V,), cache, len)
+    mixed_step: Callable = None    # (params, batch{tokens (B,C), q_len (B,)},
+    #                                cache, cache_len) -> (logits (B,V),
+    #                                cache): ONE mixed prefill+decode tick —
+    #                                decode rows at q_len 1, the mid-prefill
+    #                                row at its chunk width, each at its own
+    #                                cache_len cursor (attention-only)
     with_qmm: Callable = None      # (qmm) -> ModelApi whose serving entry
     #                                points route packed weight leaves
     #                                through the fused dequant-GEMM hook
@@ -712,16 +727,51 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
             logits = shard_act(logits, ("batch", "vocab"))
             return logits, new_cache
 
-        return prefill, serve_step, prefill_chunk
+        def mixed_step(params, batch, cache, cache_len):
+            """One unified mixed prefill+decode tick (the single-executable
+            scheduler; docs/serving_internals.md §6).
 
-    prefill, serve_step, prefill_chunk = _serving_fns(None)
+            ``batch["tokens"]`` (B, C): each row's new tokens, left-aligned;
+            ``batch["q_len"]`` (B,): how many are real — decoding rows carry
+            1, the (single) mid-prefill row carries its chunk, pad lanes are
+            masked and never written. Row ``b``'s token ``i`` sits at
+            logical position ``cache_len[b] + i``; K/V land there (through
+            the block table when paged) and logits come back at each row's
+            LAST real token — next-token logits for decode rows, chunk-final
+            logits for the mid-prefill row (meaningful only on its final
+            chunk; the engine discards the rest). Returns (logits, cache).
+            """
+            if cfg.vision_tokens > 0:
+                raise ValueError(
+                    "mixed_step does not support prepended vision embeds; "
+                    "use sequential admission")
+            ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
+            tokens = batch["tokens"]
+            q_len = batch["q_len"].astype(jnp.int32)
+            b, c = tokens.shape
+            x = _embed(params, cfg, tokens)
+            positions = cache_len[:, None] + \
+                jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+            hidden, new_cache, _ = forward_hidden(
+                ctx, params, cfg, x, positions, cache=cache,
+                cache_len=cache_len, prefill=False, q_len=q_len,
+                attn_impl=attn_impl)
+            h_last = _last_hidden(hidden, q_len)
+            logits = _head_logits(ctx, params, cfg, h_last)
+            logits = shard_act(logits, ("batch", "vocab"))
+            return logits, new_cache
+
+        return prefill, serve_step, prefill_chunk, mixed_step
+
+    prefill, serve_step, prefill_chunk, mixed_step = _serving_fns(None)
 
     def with_serving(qmm=None, attn_impl="gather"):
-        p, s, pc = _serving_fns(qmm, attn_impl)
+        p, s, pc, ms = _serving_fns(qmm, attn_impl)
         return dataclasses.replace(
             api, prefill=p, serve_step=s, prefill_slot=make_prefill_slot(p),
             prefill_chunk=pc,
             prefill_chunk_slot=make_prefill_chunk_slot(pc),
+            mixed_step=ms,
             attn_impl=attn_impl,
             # with_qmm on the derived api keeps ITS attn_impl (chaining must
             # not silently reset the decode path to the base default)
@@ -742,6 +792,7 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         prefill_slot=make_prefill_slot(prefill),
         prefill_chunk=prefill_chunk,
         prefill_chunk_slot=make_prefill_chunk_slot(prefill_chunk),
+        mixed_step=mixed_step,
         with_qmm=with_qmm,
         with_serving=with_serving,
     )

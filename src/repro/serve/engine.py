@@ -69,9 +69,10 @@ import numpy as np
 from repro.core.anchor import AnchorModel, convert, materialize
 from repro.core.formats import get_format
 from repro.core.mx import MXTensor
-from repro.kernels.paged_attention import pages_read
+from repro.kernels.paged_attention import pages_read, pages_read_mq
 from repro.models.transformer import ModelApi
 from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
+                                       make_packed_mixed_step,
                                        make_packed_params,
                                        make_packed_prefill_chunk,
                                        make_packed_prefill_slot,
@@ -179,6 +180,22 @@ class ElasticEngine:
     seeded sampling). Attention-only; when paged, the chunk must be a
     multiple of ``kv_page_size`` so chunk boundaries fall on pages and each
     chunk's pages are allocated at that chunk, not all upfront.
+
+    ``scheduler`` selects how chunked ticks execute. ``"mixed"`` (the
+    default whenever ``prefill_chunk`` is set) coalesces the prefill chunk
+    INTO the decode batch: one ``mixed_step`` executable per tick, where
+    each row carries a per-slot token budget — decoding slots contribute 1
+    query token, the (single) mid-prefill slot contributes its chunk at its
+    cursor — so decode never skips a tick during a long admission and
+    ``tick_trace`` shows exactly one executable per tick. ``"sequential"``
+    keeps the PR 4 shape (chunk executable, then decode executable) as the
+    provably equivalent fallback. Sampling-wise the epilogue is fused but
+    ordered identically: the batched draw advances every slot key exactly
+    once per decode-carrying tick, and a completing admission reseeds its
+    slot from ``(engine key, rid)`` AFTER the batch draw — so token streams
+    are bit-identical to sequential admission (greedy and seeded) across
+    all layout/contract pairings; the tests in tests/test_mixed_batch.py
+    hold that line. Requires ``prefill_chunk``.
     """
 
     def __init__(self, api: ModelApi, anchor: AnchorModel, *,
@@ -191,7 +208,8 @@ class ElasticEngine:
                  kv_layout: str = "dense", kv_page_size: int = 16,
                  kv_num_pages: Optional[int] = None,
                  attn_impl: Optional[str] = None,
-                 prefill_chunk=None):
+                 prefill_chunk=None,
+                 scheduler: Optional[str] = None):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
@@ -277,6 +295,23 @@ class ElasticEngine:
                     f"kv_page_size ({kv_page_size}) so chunk boundaries "
                     "fall on page boundaries")
         self.prefill_chunk = prefill_chunk
+        # Unified-tick scheduler (class docstring): "mixed" is the default
+        # wherever chunked admission makes a mixed tick possible.
+        if scheduler in (None, "auto"):
+            scheduler = "mixed" if prefill_chunk is not None else "sequential"
+        if scheduler not in ("sequential", "mixed"):
+            raise ValueError(f"unknown scheduler {scheduler!r}; one of "
+                             "('sequential', 'mixed')")
+        if scheduler == "mixed":
+            if prefill_chunk is None:
+                raise ValueError(
+                    "scheduler='mixed' coalesces the prefill chunk into the "
+                    "decode batch; set prefill_chunk (or 'auto')")
+            if api.mixed_step is None:
+                raise ValueError(
+                    f"model family {api.cfg.family!r} has no mixed_step "
+                    "entry point; use scheduler='sequential'")
+        self.scheduler = scheduler
         self._admission_requeues = 0
         self.tick_trace: List[Dict[str, float]] = []   # reset per generate
         self._kv_pages_alloc = 0
@@ -332,6 +367,16 @@ class ElasticEngine:
             make_packed_prefill_chunk(api, self._block_size,
                                       fused=self.fused))) \
             if api.prefill_chunk_slot is not None else None
+        # Unified mixed-tick entry points (lazy jit, one compile per chunk
+        # width bucket — counted like chunk compiles). They bake attn_impl
+        # in like the decode steps: the ragged multi-query paged read runs
+        # the gather-free MQ kernel under "paged_kernel".
+        self._dense_mixed = jax.jit(self._counting(step_api.mixed_step)) \
+            if step_api.mixed_step is not None else None
+        self._packed_mixed = jax.jit(self._counting(
+            make_packed_mixed_step(api, self._block_size, fused=self.fused,
+                                   attn_impl=self.attn_impl))) \
+            if api.mixed_step is not None else None
 
     def _counting(self, fn):
         """Wrap a to-be-jitted fn so traces (= compiles) are counted."""
@@ -496,8 +541,12 @@ class ElasticEngine:
                 or any(a is not None for a in active):
             t_tick = time.perf_counter()
             if pinned is None:             # engine drained: re-pick format
+                # Load counts queued requests AND their pending prompt
+                # tokens, so a queue of long prompts downshifts before the
+                # admissions start, not after (serve/policy.py).
                 pinned = fmt_override or self.policy.pick(
-                    queue_depth=len(pending), active=0)
+                    queue_depth=len(pending), active=0,
+                    prefill_tokens=sum(r.prompt.size for r in pending))
             params = self.set_format(pinned)
             use_packed = self._serves_packed(pinned)
             prefill_slot = self._packed_prefill_slot if use_packed \
@@ -505,8 +554,12 @@ class ElasticEngine:
             chunk_fn = self._packed_prefill_chunk if use_packed \
                 else self._dense_prefill_chunk
             step = self._packed_step if use_packed else self._dense_step
+            mixed_fn = self._packed_mixed if use_packed else self._dense_mixed
             tick_pf_tokens = 0
             tick_pf_chunks = 0
+            tick_execs = 0                 # executables dispatched this tick
+            tick_rows = 0                  # batch rows those executables ran
+            chunk_tok = None               # staged chunk for the mixed tick
 
             if chunk is None:
                 # ---- monolithic admission: one whole prompt per free slot,
@@ -532,11 +585,17 @@ class ElasticEngine:
                                                           cache, i)
                     tick_pf_tokens += pbatch["tokens"].shape[1]
                     tick_pf_chunks += 1
+                    tick_execs += 1
+                    tick_rows += 1
                     cache_len = cache_len.at[i].set(new_len)
                     slot_len[i] = prompt.size
                     complete_admission(i, r, logits)
             else:
-                # ---- chunked admission: at most ONE prefill chunk per tick
+                # ---- chunked admission bookkeeping: claim the (single)
+                # mid-prefill request and allocate THIS chunk's pages
+                # (release-and-requeue on exhaustion). Whether the staged
+                # chunk runs as its own executable or rides the decode batch
+                # is the scheduler's call, below.
                 if filling is None and pending and not wait_pages \
                         and None in active:
                     fill_slot = active.index(None)
@@ -544,6 +603,10 @@ class ElasticEngine:
                     assert filling.prompt.size <= self.prompt_capacity, \
                         (f"prompt ({filling.prompt.size}) exceeds capacity "
                          f"({self.prompt_capacity} = max_len - 1)")
+                    # The mixed tick reads the fill row's cursor from
+                    # cache_len; zero the stale value from the slot's
+                    # previous occupant at claim time.
+                    cache_len = cache_len.at[fill_slot].set(0)
                 if filling is not None:
                     r, i = filling, fill_slot
                     prompt = np.asarray(r.prompt, np.int32)
@@ -585,23 +648,48 @@ class ElasticEngine:
                     if ok:
                         ctoks = np.zeros(padded, np.int32)
                         ctoks[:take] = prompt[start:start + take]
-                        pbatch = {"tokens": jnp.asarray(ctoks[None]),
-                                  "lengths": jnp.asarray([plen], jnp.int32)}
-                        logits, cache, new_len = chunk_fn(params, pbatch,
-                                                          cache, i, start)
-                        tick_pf_tokens += padded
-                        tick_pf_chunks += 1
-                        cache_len = cache_len.at[i].set(new_len)
-                        fill_cursor = start + take
-                        if final:
-                            slot_len[i] = plen
-                            complete_admission(i, r, logits)
-                            filling = None
+                        chunk_tok = (start, take, padded, final)
 
-            if all(a is None for a in active):
+                # A staged chunk runs as its own executable under the
+                # sequential scheduler — and when no slot is decoding, where
+                # the two schedulers coincide (one executable either way,
+                # identical numerics).
+                chunk_ran_alone = False
+                if chunk_tok is not None and (
+                        self.scheduler == "sequential"
+                        or not any(a is not None for a in active)):
+                    chunk_ran_alone = True
+                    start, take, padded, final = chunk_tok
+                    pbatch = {"tokens": jnp.asarray(ctoks[None]),
+                              "lengths": jnp.asarray([plen], jnp.int32)}
+                    logits, cache, new_len = chunk_fn(params, pbatch,
+                                                      cache, i, start)
+                    tick_pf_tokens += padded
+                    tick_pf_chunks += 1
+                    tick_execs += 1
+                    tick_rows += 1
+                    cache_len = cache_len.at[i].set(new_len)
+                    fill_cursor = start + take
+                    if final:
+                        slot_len[i] = plen
+                        complete_admission(i, r, logits)
+                        filling = None
+                    chunk_tok = None
+
+            all_free = all(a is None for a in active)
+            if all_free or (chunk is not None and chunk_ran_alone
+                            and self.scheduler == "mixed"):
+                # No decode this tick. Under the mixed scheduler a chunk
+                # that ran alone ends the tick even when it just completed
+                # admission — the new slot's first decode is next tick's
+                # (one) executable, never a second one on this tick. The
+                # slot's stream is unchanged: its key advances once per
+                # decode tick it sits in, wherever that tick falls.
                 self._record_tick(tick_pf_tokens, tick_pf_chunks, 0,
-                                  time.perf_counter() - t_tick)
-                if filling is None:
+                                  time.perf_counter() - t_tick,
+                                  execs=tick_execs, rows=tick_rows,
+                                  decode_rows=0)
+                if all_free and filling is None:
                     pinned = None          # drained; next wave re-picks
                 continue
 
@@ -619,13 +707,69 @@ class ElasticEngine:
                         continue
                     pg = slot_len[i] // ps
                     if bt[i, pg] == 0:
-                        bt[i, pg] = self._alloc_pages(
-                            free_pages, 1, f"decode tick for rid={r.rid}")[0]
+                        try:
+                            got = self._alloc_pages(
+                                free_pages, 1,
+                                f"decode tick for rid={r.rid}")
+                        except RuntimeError:
+                            # A decoding slot outranks a partial admission:
+                            # release the mid-prefill slot's pages (this
+                            # tick's staged chunk included), requeue it, and
+                            # retry. Restarting the admission from chunk 0
+                            # later cannot perturb its stream (the slot RNG
+                            # seeds at prefill completion). With no
+                            # admission to roll back, the pool is genuinely
+                            # overcommitted to decoders — die loudly.
+                            if filling is None:
+                                raise
+                            self._free_slot_pages(free_pages, bt, fill_slot)
+                            pending.insert(0, filling)
+                            filling = None
+                            chunk_tok = None
+                            self._admission_requeues += 1
+                            wait_pages = True
+                            dirty = True
+                            got = self._alloc_pages(
+                                free_pages, 1,
+                                f"decode tick for rid={r.rid}")
+                        bt[i, pg] = got[0]
                         dirty = True
                 if dirty:
                     cache["block_table"] = jnp.asarray(bt)
-            logits, cache = step(params, {"tokens": tokens}, cache, cache_len)
-            cache_len = cache_len + jnp.asarray(mask)
+            if chunk_tok is not None:
+                # ---- mixed tick: the staged chunk rides the decode batch as
+                # ONE executable. Decode rows keep their 1-token budget in
+                # column 0; the fill row carries the whole chunk at its
+                # cursor. Free rows stay masked exactly as under serve_step
+                # (q_len=1, cursor frozen, scratch-page writes).
+                start, take, padded, final = chunk_tok
+                tok2d = jnp.zeros((b, padded), jnp.int32) \
+                    .at[:, 0].set(tokens[:, 0]) \
+                    .at[fill_slot].set(jnp.asarray(ctoks))
+                q_len_np = np.ones(b, np.int32)
+                q_len_np[fill_slot] = take
+                logits, cache = mixed_fn(
+                    params, {"tokens": tok2d,
+                             "q_len": jnp.asarray(q_len_np)},
+                    cache, cache_len)
+                adv = mask.copy()
+                adv[fill_slot] = take
+                cache_len = cache_len + jnp.asarray(adv)
+                tick_pf_tokens += padded
+                tick_pf_chunks += 1
+                tick_execs += 1
+                tick_rows += b
+            else:
+                logits, cache = step(params, {"tokens": tokens},
+                                     cache, cache_len)
+                cache_len = cache_len + jnp.asarray(mask)
+                tick_execs += 1
+                tick_rows += b
+            # The batched draw advances EVERY slot key once per decode-
+            # carrying tick — the fill row's draw is discarded, and if its
+            # chunk completed this tick, complete_admission reseeds the key
+            # from scratch below, so the stream matches sequential admission
+            # bit for bit.
             nxt = self._sample(logits, greedy)
             tokens = nxt[:, None].astype(jnp.int32)
             self._ticks += 1
@@ -646,6 +790,13 @@ class ElasticEngine:
                 elif active[i] is not None:
                     self._attn_tokens_read += \
                         pages_read(slot_len[i] + 1, ps, window) * ps
+                elif chunk_tok is not None and i == fill_slot:
+                    # Mixed tick: the fill row's ragged query span walks its
+                    # own clamped page range (pages_read_mq mirrors the MQ
+                    # kernel's arithmetic the way pages_read mirrors the
+                    # single-query kernel's).
+                    self._attn_tokens_read += \
+                        pages_read_mq(start, take, ps, window) * ps
                 elif filling is not None and i == fill_slot:
                     self._attn_tokens_read += \
                         pages_read(fill_cursor + 1, ps, window) * ps
@@ -668,27 +819,46 @@ class ElasticEngine:
                         self._free_slot_pages(free_pages, bt, i)
                         cache["block_table"] = jnp.asarray(bt)
                     wait_pages = False     # freed pages: admission may retry
+            if chunk_tok is not None:
+                # ---- mixed-tick chunk epilogue: advance the cursor, and if
+                # the chunk reached the prompt end, complete admission from
+                # the fill row's logits — AFTER the batched draw above, so
+                # the reseed overwrites the discarded draw's key advance.
+                fill_cursor = start + take
+                if final:
+                    slot_len[fill_slot] = plen
+                    complete_admission(fill_slot, filling, logits[fill_slot])
+                    filling = None
             self._record_tick(tick_pf_tokens, tick_pf_chunks, 1,
-                              time.perf_counter() - t_tick)
+                              time.perf_counter() - t_tick,
+                              execs=tick_execs, rows=tick_rows,
+                              decode_rows=int(mask.sum()))
             if all(a is None for a in active) and filling is None:
                 pinned = None
         return requests
 
     def _record_tick(self, prefill_tokens: int, prefill_chunks: int,
-                     decode: int, wall_s: float) -> None:
+                     decode: int, wall_s: float, *, execs: int = 0,
+                     rows: int = 0, decode_rows: int = 0) -> None:
         """Append one scheduler-tick trace entry (reset per ``generate``).
 
         ``prefill_tokens`` counts padded prompt tokens prefilled this tick
         (one chunk at most under chunked admission; whole prompts under
-        monolithic), ``decode`` is 1 when a batched decode step ran. The
-        chunked-admission bound — no tick exceeds one chunk of prefill plus
-        one decode step — is asserted from these counters in tests, and
-        ``benchmarks/serve_engine_bench.py`` derives its decode-stall
-        column from ``wall_s``.
+        monolithic), ``decode`` is 1 when a batched decode step ran.
+        ``execs`` counts device executables dispatched this tick — the
+        mixed scheduler's invariant, exactly one per work tick, is asserted
+        from it in tests (monolithic admission may run several: one prefill
+        per admitted slot plus the decode step). ``rows`` counts batch rows
+        those executables processed and ``decode_rows`` the subset that were
+        live decoding slots; ``benchmarks/serve_engine_bench.py`` derives
+        its decode-occupancy and decode-stall columns from these plus
+        ``wall_s``.
         """
         self.tick_trace.append({"prefill_tokens": prefill_tokens,
                                 "prefill_chunks": prefill_chunks,
-                                "decode": decode, "wall_s": wall_s})
+                                "decode": decode, "wall_s": wall_s,
+                                "execs": execs, "rows": rows,
+                                "decode_rows": decode_rows})
 
     def _free_slot_pages(self, free_pages: List[int], bt: np.ndarray,
                          slot: int) -> None:

@@ -307,6 +307,27 @@ def make_packed_serve_step(api, block_size: int = 32, *,
     return make_packed_fn(api, api.serve_step, block_size)
 
 
+def make_packed_mixed_step(api, block_size: int = 32, *,
+                           fused: bool = False, attn_impl: str = "gather"):
+    """Unified mixed prefill+decode tick over packed params.
+
+    ``(packed_params, batch{tokens (B,C), q_len (B,)}, cache, cache_len)
+    -> (logits (B,V), cache)`` — the single-executable scheduler tick
+    subsuming serve_step + prefill_chunk (``ModelApi.mixed_step``): decode
+    rows carry 1 real token, the mid-prefill row its chunk, each at its own
+    ``cache_len`` cursor. Contracts mirror ``make_packed_serve_step``:
+    fused Pallas dequant-GEMM vs XLA densify-inside-jit on the weight side,
+    and ``attn_impl`` picking the ragged multi-query paged read path — the
+    gather-free MQ block-table kernel (``"paged_kernel"``) vs gather +
+    masked softmax (``"gather"``). Any (fused, attn_impl) pairing yields
+    identical token streams.
+    """
+    if fused:
+        return _fused_api(api, block_size, attn_impl).mixed_step
+    api = _attn_api(api, attn_impl)
+    return make_packed_fn(api, api.mixed_step, block_size)
+
+
 def make_packed_prefill_slot(api, block_size: int = 32, *,
                              fused: bool = False):
     """Single-slot prefill-insert over packed params (see ModelApi).

@@ -6,6 +6,14 @@ This policy maps load (queue depth / active slots) to a format ladder —
 deeper queues pick lower-precision (faster, memory-lighter) formats; an idle
 server uses the anchor precision. Thresholds are configurable; hysteresis
 avoids thrashing between adjacent formats.
+
+Load is queue depth PLUS the queued prompt tokens still waiting to prefill,
+scaled by ``prefill_token_unit``: a queue of two 4k-token prompts is a very
+different commitment from two 16-token ones, and under chunked admission
+those prompts occupy the engine for many ticks. Counting them up front makes
+the downshift fire BEFORE a long admission starts — the format is pinned for
+each batch wave, so a decision made from queue depth alone would ride out
+the whole admission at too high a precision.
 """
 from __future__ import annotations
 
@@ -23,14 +31,19 @@ class FormatPolicy:
         (0, "mxint8"),
     )
     hysteresis: int = 2
+    # One queued request "counts double" per this many pending prompt tokens
+    # — the ladder thresholds stay in queue-depth units.
+    prefill_token_unit: int = 64
     _last: str = dataclasses.field(default="", init=False)
     _stable: int = dataclasses.field(default=0, init=False)
     history: List[str] = dataclasses.field(default_factory=list, init=False)
 
-    def pick(self, queue_depth: int, active: int = 0) -> str:
+    def pick(self, queue_depth: int, active: int = 0,
+             prefill_tokens: int = 0) -> str:
+        load = queue_depth + prefill_tokens // self.prefill_token_unit
         target = self.anchor
         for thresh, fmt in self.ladder:
-            if queue_depth >= thresh:
+            if load >= thresh:
                 target = fmt
                 break
         if self._last and target != self._last:
