@@ -168,6 +168,96 @@ def bench_path(api, anchor, params, fmt, fused, *, slots, max_len,
     }
 
 
+def bench_chaos(api, anchor, params, *, slots, max_len, n_requests,
+                max_new, vocab, rates, seed=0):
+    """The --chaos sweep (docs/serving_internals.md §7): one row per fault
+    rate, all at the ANCHOR rung so every injected fault is either
+    recovered by a same-format replay (transient crash), absorbed by the
+    capacity path (alloc failure -> requeue), or confined to one request
+    (row poison -> FAILED_NUMERIC). Two hard gates, both process-failing:
+
+      - stream identity: every request that COMPLETED under chaos carries a
+        token stream bit-identical to the fault-free (rate 0) run;
+      - page accounting: kv_pages_alloc == kv_pages_freed at drain — chaos
+        must not leak the free list.
+
+    A final "ladder" demo row starts at mxint4 with a format-following
+    poison and reports the escalation walk instead of the identity gate
+    (its streams are the escalated rung's, deliberately different)."""
+    from repro.runtime.fault import FaultInjector, random_plan
+    from repro.serve.engine import RequestStatus
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, vocab, PROMPT_LEN).astype(np.int32)
+               for _ in range(n_requests)]
+
+    def run(fi, fmt):
+        eng = ElasticEngine(api, anchor, batch_slots=slots, max_len=max_len,
+                            param_template=params, kv_layout="paged",
+                            kv_page_size=8, fault_injector=fi)
+        reqs = [Request(rid=i, prompt=prompts[i].copy(), max_new=max_new)
+                for i in range(n_requests)]
+        t0 = time.perf_counter()
+        eng.generate(reqs, fmt_override=fmt)
+        dt = time.perf_counter() - t0
+        st = eng.stats
+        if st["kv_pages_alloc"] != st["kv_pages_freed"]:
+            raise SystemExit(
+                f"chaos leaked KV pages: {st['kv_pages_alloc']} allocated, "
+                f"{st['kv_pages_freed']} freed")
+        if not all(r.done and r.status.terminal for r in reqs):
+            raise SystemExit("chaos left a request without a terminal "
+                             "status")
+        return eng, reqs, st, dt
+
+    print("chaos,fault_rate,injected,recovered_ticks,escalations,"
+          "completed,failed_numeric,failed_capacity,timed_out,cancelled,"
+          "requeues,tokens,wall_s")
+
+    def emit(label, rate, fi, eng, reqs, st, dt):
+        counts = st["request_statuses"]
+        print(f"{label},{rate},{len(fi.events) if fi else 0},"
+              f"{st['ticks_replayed']},{st['fmt_escalations']},"
+              f"{counts.get('completed', 0)},"
+              f"{counts.get('failed_numeric', 0)},"
+              f"{counts.get('failed_capacity', 0)},"
+              f"{counts.get('timed_out', 0)},{counts.get('cancelled', 0)},"
+              f"{st['admission_requeues']},"
+              f"{sum(len(r.out_tokens) for r in reqs)},{dt:.2f}")
+
+    base_streams = None
+    for rate in rates:
+        fi = random_plan(seed, rate, horizon=64, slots=slots) \
+            if rate > 0 else None
+        eng, reqs, st, dt = run(fi, "mxint8")
+        emit("sweep", rate, fi, eng, reqs, st, dt)
+        streams = {r.rid: list(r.out_tokens) for r in reqs
+                   if r.status is RequestStatus.COMPLETED}
+        if rate == 0:
+            base_streams = streams
+        elif base_streams is not None:
+            diverged = [rid for rid, s in streams.items()
+                        if base_streams.get(rid) != s]
+            if diverged:
+                raise SystemExit(
+                    f"chaos rate {rate}: surviving streams diverged from "
+                    f"the fault-free run for rids {diverged} — fault "
+                    "isolation broke bit-identity")
+    if base_streams is not None and len(rates) > 1:
+        print("# chaos survivors bit-identical to the fault-free run "
+              "across all rates = True")
+
+    # Degradation-ladder demo: a rung that fails at runtime walks toward
+    # the anchor and the wave still completes.
+    fi = FaultInjector(poison_logits={2: None}, poison_fmt="mxint4")
+    eng, reqs, st, dt = run(fi, "mxint4")
+    emit("ladder", "-", fi, eng, reqs, st, dt)
+    ev = st["escalation_events"]
+    print(f"# ladder: {' -> '.join([ev[0]['from']] + [e['to'] for e in ev])}"
+          f" (quarantined: {','.join(st['quarantined_formats'])}); "
+          f"completed {st['request_statuses'].get('completed', 0)}"
+          f"/{n_requests}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -202,6 +292,14 @@ def main():
                     help="every Nth request gets the long prompt")
     ap.add_argument("--long-len", type=int, default=40,
                     help="long-prompt length (the admission-stall driver)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection sweep instead of the "
+                         "perf matrix: seeded chaos at increasing fault "
+                         "rates, with hard gates on survivor-stream "
+                         "identity and page accounting, plus a format-"
+                         "ladder degradation demo")
+    ap.add_argument("--fault-rates", default="0,0.1,0.25",
+                    help="comma-separated per-tick fault rates for --chaos")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -210,6 +308,13 @@ def main():
     qat = QATConfig(formats=("mxint4", "mxint8"), anchor="mxint8",
                     block_size=32)
     anchor = make_anchor(params, qat, get_format("mxint8", 32))
+
+    if args.chaos:
+        bench_chaos(api, anchor, params, slots=args.slots,
+                    max_len=args.max_len, n_requests=args.requests,
+                    max_new=args.max_new, vocab=cfg.vocab,
+                    rates=[float(x) for x in args.fault_rates.split(",")])
+        return
 
     # default chunk: one KV page (floored at the minimum prefill bucket) so
     # the chunked rows satisfy the page-alignment rule for any --page-size

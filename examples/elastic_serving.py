@@ -28,6 +28,12 @@ With --prefill-chunk N, admission is *chunked* (docs/serving_internals.md
 at most one chunk of prefill per tick — so running slots' inter-token
 latency stays bounded while a long prompt admits. Token streams are
 bit-identical either way.
+
+The final section demonstrates the failure model (docs/serving_internals.md
+§7): a deterministic FaultInjector makes the lowest rung produce NaN
+logits at runtime, and the engine's logit guard escalates the live batch
+one rung toward the anchor, replays the tick, quarantines the bad rung,
+and completes every request — degradation costs precision, never streams.
 """
 import argparse
 import sys
@@ -41,6 +47,7 @@ from repro.configs import get_reduced  # noqa: E402
 from repro.core import get_format, make_anchor  # noqa: E402
 from repro.core.qat import QATConfig  # noqa: E402
 from repro.models import get_model  # noqa: E402
+from repro.runtime.fault import FaultInjector  # noqa: E402
 from repro.serve.engine import ElasticEngine, Request  # noqa: E402
 from repro.serve.policy import FormatPolicy  # noqa: E402
 
@@ -132,6 +139,35 @@ def main():
     eng.generate(reqs)
     fmts = sorted({r.fmt_used for r in reqs})
     print(f"  formats used across the burst: {fmts}")
+
+    print("\nDEGRADATION LADDER: mxint4 turns out numerically bad at "
+          "runtime (injected NaN logits, fmt-scoped) — the guard escalates "
+          "the live batch one rung toward the anchor, replays the tick, "
+          "and quarantines the bad rung; survivors keep streaming")
+    fi = FaultInjector(poison_logits={2: None}, poison_fmt="mxint4")
+    chaos = ElasticEngine(api, anchor, batch_slots=4, max_len=64,
+                          policy=FormatPolicy(
+                              anchor="mxint8",
+                              ladder=((12, "mxint4"), (6, "mxint6"),
+                                      (0, "mxint8")), hysteresis=1),
+                          param_template=params, kv_layout="paged",
+                          kv_page_size=8, kv_num_pages=13,
+                          fault_injector=fi)
+    reqs = [Request(rid=300 + i, prompt=rng.integers(0, cfg.vocab, 8)
+                    .astype(np.int32), max_new=6) for i in range(4)]
+    chaos.generate(reqs, fmt_override="mxint4")
+    cs = chaos.stats
+    for ev in cs["escalation_events"]:
+        print(f"  tick {ev['tick']}: {ev['from']} -> {ev['to']} "
+              f"(quarantined: {sorted(chaos.policy.quarantined)})")
+    print(f"  faults detected={cs['faults_detected']} "
+          f"ticks replayed={cs['ticks_replayed']} "
+          f"statuses={cs['request_statuses']} "
+          f"pages {cs['kv_pages_alloc']} alloc / "
+          f"{cs['kv_pages_freed']} freed")
+    for r in reqs:
+        print(f"  req {r.rid}: fmt={r.fmt_used} status={r.status.value} "
+              f"n_out={len(r.out_tokens)}")
 
     st = eng.stats
     contract = "fused Pallas dequant-GEMM" if st["fused"] \

@@ -14,7 +14,14 @@ Design points for 1000+-node runs:
     shardings the new run provides (elastic scaling);
   - keep_n garbage-collects old steps only after LATEST moves forward;
   - anchor (packed MX) checkpoints live in ``anchor_ckpt.py`` and share the
-    manifest format.
+    manifest format;
+  - ``save_flat``/``restore_flat`` are the template-free twins of
+    save/restore: arrays keyed by caller-chosen flat names, loadable
+    without knowing the pytree structure up front. ``ElasticEngine``
+    snapshots its scheduler state through them (the snapshot's key set —
+    per-request prompts, variable-length queues — is only known from the
+    manifest, so a structural template cannot exist before the load; see
+    docs/serving_internals.md §7).
 
 In a true multi-host deployment each host would write its addressable shards
 (orbax-style); this container is single-process, so save() gathers. The
@@ -55,15 +62,15 @@ def step_dir(root: str, step: int) -> str:
     return os.path.join(root, f"step_{step:09d}")
 
 
-def save(root: str, step: int, tree, extra_meta: Optional[Dict] = None,
-         keep_n: int = 3) -> str:
+def _write_step(root: str, step: int, arrays: Dict[str, np.ndarray],
+                extra_meta: Optional[Dict], keep_n: int) -> str:
+    """Atomic step writer shared by ``save`` and ``save_flat``: tmp dir +
+    rename, LATEST pointer advance, then keep-N garbage collection."""
     os.makedirs(root, exist_ok=True)
     final = step_dir(root, step)
     tmp = final + f".tmp.{os.getpid()}"
     os.makedirs(tmp, exist_ok=True)
 
-    flat = _flat(tree)
-    arrays = {k: np.asarray(v) for k, v in flat.items()}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     manifest = {
         "step": step,
@@ -88,6 +95,23 @@ def save(root: str, step: int, tree, extra_meta: Optional[Dict] = None,
     return final
 
 
+def save(root: str, step: int, tree, extra_meta: Optional[Dict] = None,
+         keep_n: int = 3) -> str:
+    flat = _flat(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    return _write_step(root, step, arrays, extra_meta, keep_n)
+
+
+def save_flat(root: str, step: int, arrays: Dict[str, Any],
+              extra_meta: Optional[Dict] = None, keep_n: int = 3) -> str:
+    """Like ``save`` but the caller provides flat ``name -> array`` pairs
+    verbatim — no pytree flattening, so ``restore_flat`` can hand the same
+    names back without a structural template."""
+    return _write_step(root, step,
+                       {k: np.asarray(v) for k, v in arrays.items()},
+                       extra_meta, keep_n)
+
+
 def _gc(root: str, keep_n: int):
     steps = sorted(d for d in os.listdir(root) if d.startswith("step_")
                    and not d.endswith(".tmp") and ".tmp." not in d)
@@ -104,6 +128,23 @@ def latest_step(root: str) -> Optional[int]:
     if not os.path.isdir(os.path.join(root, name)):
         return None
     return int(name.split("_")[1])
+
+
+def restore_flat(root: str, step: Optional[int] = None):
+    """Template-free load: ``(arrays, manifest)`` with arrays keyed exactly
+    as ``save_flat`` stored them (``step=None`` follows LATEST). The caller
+    owns re-assembly — this is the entry point for state whose key set is
+    data-dependent (e.g. engine snapshots keyed by request id)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = step_dir(root, step)
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    with open(os.path.join(d, MANIFEST)) as f:
+        manifest = json.load(f)
+    return arrays, manifest
 
 
 def restore(root: str, template, step: Optional[int] = None,

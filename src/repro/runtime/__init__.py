@@ -1,1 +1,3 @@
-from repro.runtime.fault import PreemptionGuard, StragglerMonitor, Watchdog
+from repro.runtime.fault import (FaultInjector, InjectedFault,
+                                 PreemptionGuard, StragglerMonitor, Watchdog,
+                                 random_plan)

@@ -1,26 +1,47 @@
-"""Fault tolerance: preemption handling, watchdog heartbeat, stragglers.
+"""Fault tolerance: preemption handling, watchdog heartbeat, stragglers,
+and deterministic fault injection for the serving engine's chaos tests.
 
 What runs where on a real pod fleet:
   - PreemptionGuard: SIGTERM/SIGINT -> set a flag; the train loop checks it
     every step and checkpoints-then-exits cleanly (maps to Borg/GCE
-    preemption notices). Re-entry resumes from LATEST.
+    preemption notices). Re-entry resumes from LATEST. The serving engine
+    uses the same guard: ``ElasticEngine.generate(..., guard=...)``
+    snapshots its scheduler state at the next tick boundary and returns
+    (docs/serving_internals.md §7).
   - Watchdog: a step-duration heartbeat; if a step exceeds `timeout_s`
     (hung collective / dead host), the registered callback fires — in
     production that aborts the job so the scheduler restarts it from the
-    last checkpoint; here it raises.
+    last checkpoint.
+
+    **Callback-thread contract:** ``on_timeout`` runs on the *watchdog's
+    daemon thread*, never on the caller's. An exception raised inside it
+    kills only that thread — it cannot abort the loop being watched. A
+    custom callback must therefore signal out-of-band (set a flag, send a
+    signal, abort the process). The default callback does exactly that:
+    it *records* a ``TimeoutError``, which ``heartbeat()`` / ``stop()``
+    re-raise on the calling thread — so a hung-then-recovered step dies at
+    its next heartbeat instead of the timeout being silently swallowed.
   - StragglerMonitor: rolling per-step stats; steps slower than
     `threshold x median` are flagged. On TPU pods persistent stragglers are
     handled by re-scheduling the slow host; the monitor exposes the signal
     and suggested action, and records events for the run report.
+  - FaultInjector: a deterministic, plan-driven chaos hook for
+    ``ElasticEngine``. Every primitive fires at an explicit scheduler-tick
+    (or allocation-call) index, so a chaos run is exactly reproducible
+    from its plan; ``random_plan`` derives a plan from a seed + rate for
+    the benchmark's chaos sweep. The injector never mutates engine state
+    itself — the engine calls its hooks and applies the returned effects,
+    and every fired primitive is appended to ``events``.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import signal
 import statistics
 import threading
 import time
-from typing import Callable, List, Optional
+from typing import (Callable, Dict, FrozenSet, List, Optional, Tuple, Union)
 
 
 class PreemptionGuard:
@@ -54,7 +75,14 @@ class PreemptionGuard:
 
 
 class Watchdog:
-    """Fires `on_timeout` if heartbeat() isn't called within timeout_s."""
+    """Fires `on_timeout` if heartbeat() isn't called within timeout_s.
+
+    ``on_timeout`` runs on the watchdog's daemon thread (see the module
+    docstring for the callback-thread contract). With the default
+    callback, a timeout is recorded and re-raised as ``TimeoutError`` from
+    the *next* ``heartbeat()`` or from ``stop()`` — i.e. on the thread
+    that owns the watched loop, where it can actually abort it.
+    """
 
     def __init__(self, timeout_s: float,
                  on_timeout: Optional[Callable[[], None]] = None):
@@ -63,11 +91,22 @@ class Watchdog:
         self._last = time.monotonic()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._timeout_exc: Optional[TimeoutError] = None
         self.fired = False
 
-    @staticmethod
-    def _default():
-        raise TimeoutError("watchdog: training step exceeded timeout")
+    def _default(self):
+        # Runs on the watchdog thread: raising here would kill only that
+        # thread (the pre-fix bug), so record and let the caller's next
+        # heartbeat()/stop() re-raise where it can abort the loop.
+        self._timeout_exc = TimeoutError(
+            f"watchdog: step exceeded the {self.timeout_s:.1f}s heartbeat "
+            "timeout (raised at the next heartbeat on the caller's thread; "
+            "the timeout itself fired on the watchdog thread)")
+
+    def _reraise(self):
+        if self._timeout_exc is not None:
+            exc, self._timeout_exc = self._timeout_exc, None
+            raise exc
 
     def start(self):
         self._last = time.monotonic()
@@ -76,12 +115,14 @@ class Watchdog:
         return self
 
     def heartbeat(self):
+        self._reraise()
         self._last = time.monotonic()
 
     def stop(self):
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=1)
+        self._reraise()
 
     def _run(self):
         while not self._stop.wait(min(self.timeout_s / 4, 1.0)):
@@ -116,3 +157,161 @@ class StragglerMonitor:
     @property
     def median(self) -> Optional[float]:
         return statistics.median(self.times) if self.times else None
+
+
+class InjectedFault(RuntimeError):
+    """An injector-raised fault. Subclasses ``RuntimeError`` deliberately:
+    an injected page-allocation failure rides the engine's real
+    pool-exhaustion handling paths (requeue / victim retirement), and an
+    injected step crash is caught by the tick-replay guard — the chaos
+    machinery exercises the production error paths, not parallel ones."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic chaos plan for ``ElasticEngine`` (pass as
+    ``ElasticEngine(fault_injector=...)``).
+
+    All primitives are keyed by the engine's per-``generate`` *scheduler
+    tick* index (0-based loop iterations — not decode ticks) except
+    ``fail_allocs``, which is keyed by the 0-based index of the
+    ``_alloc_pages`` call since engine construction. Primitives fire
+    **once** per key and are recorded in ``events`` — except a logit
+    poison restricted by ``poison_fmt``, which re-fires on every replay
+    attempt still running a listed format (that is the "bad rung" model:
+    the fault follows the format, so escalation — not replay — clears it).
+
+    Primitives (tentpole (c) of the fault-isolation layer):
+      - ``poison_logits``: {tick: row} — overwrite one row's (or with
+        row=None every row's) tick logits with NaN after the step runs.
+      - ``poison_fmt``: restrict logit poison to these serving formats.
+      - ``poison_pool``: {tick: physical page id} — the engine fills that
+        page of every layer's K/V pool with NaN *before* the tick
+        (persistent corruption: replay cannot clear it).
+      - ``fail_allocs``: allocation-call indices that raise
+        ``InjectedFault`` out of the page allocator.
+      - ``raise_in_step``: ticks whose step executable raises
+        ``InjectedFault`` before dispatch (transient crash; the replayed
+        attempt runs clean).
+      - ``preempt_at``: tick at which to ``trigger()`` the guard passed to
+        ``generate`` — mid-tick, so the engine acts on it at the next tick
+        boundary.
+      - ``cancel_at``: {tick: rid} — request cancellation mid-flight.
+    """
+    poison_logits: Dict[int, Optional[int]] = \
+        dataclasses.field(default_factory=dict)
+    poison_fmt: Union[str, Tuple[str, ...], FrozenSet[str], None] = None
+    fail_allocs: Tuple[int, ...] = ()
+    raise_in_step: Tuple[int, ...] = ()
+    preempt_at: Optional[int] = None
+    poison_pool: Dict[int, int] = dataclasses.field(default_factory=dict)
+    cancel_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    events: List[dict] = dataclasses.field(default_factory=list, init=False)
+    _fired: set = dataclasses.field(default_factory=set, init=False)
+
+    def _fmts(self) -> Optional[FrozenSet[str]]:
+        if self.poison_fmt is None:
+            return None
+        if isinstance(self.poison_fmt, str):
+            return frozenset((self.poison_fmt,))
+        return frozenset(self.poison_fmt)
+
+    def _record(self, kind: str, **kw) -> None:
+        self.events.append({"kind": kind, **kw})
+
+    # ---- engine hooks ------------------------------------------------------
+    def on_alloc(self, call_index: int) -> None:
+        """Raises for allocation-call indices listed in ``fail_allocs``."""
+        if call_index in self.fail_allocs \
+                and ("alloc", call_index) not in self._fired:
+            self._fired.add(("alloc", call_index))
+            self._record("fail_alloc", call=call_index)
+            raise InjectedFault(
+                f"injected page-allocation failure (call {call_index})")
+
+    def maybe_raise_step(self, tick: int) -> None:
+        """Raises once per tick listed in ``raise_in_step`` — the replay
+        attempt of the same tick runs clean (transient crash model)."""
+        if tick in self.raise_in_step and ("step", tick) not in self._fired:
+            self._fired.add(("step", tick))
+            self._record("raise_in_step", tick=tick)
+            raise InjectedFault(f"injected step-fn crash at tick {tick}")
+
+    def maybe_poison_logits(self, tick: int, fmt: str, logits):
+        """Returns (possibly poisoned) logits for this tick's attempt."""
+        if tick not in self.poison_logits:
+            return logits
+        fmts = self._fmts()
+        if fmts is not None:
+            if fmt not in fmts:
+                return logits       # escalated past the bad rung(s): clean
+        elif ("logits", tick) in self._fired:
+            return logits           # transient: fires once, replay is clean
+        self._fired.add(("logits", tick))
+        row = self.poison_logits[tick]
+        self._record("poison_logits", tick=tick, row=row, fmt=fmt)
+        import jax.numpy as jnp     # deferred: keep module import cheap
+        nan = jnp.float32(jnp.nan)
+        if row is None:
+            return jnp.full_like(logits, nan)
+        return logits.at[row].set(nan)
+
+    def pool_poison_page(self, tick: int) -> Optional[int]:
+        """Physical page id to NaN-fill before this tick (None = no-op)."""
+        if tick in self.poison_pool and ("pool", tick) not in self._fired:
+            self._fired.add(("pool", tick))
+            page = self.poison_pool[tick]
+            self._record("poison_pool", tick=tick, page=page)
+            return page
+        return None
+
+    def maybe_preempt(self, tick: int, guard) -> None:
+        if self.preempt_at == tick and guard is not None \
+                and ("preempt", tick) not in self._fired:
+            self._fired.add(("preempt", tick))
+            self._record("preempt", tick=tick)
+            guard.trigger()
+
+    def cancel_rid(self, tick: int) -> Optional[int]:
+        if tick in self.cancel_at and ("cancel", tick) not in self._fired:
+            self._fired.add(("cancel", tick))
+            rid = self.cancel_at[tick]
+            self._record("cancel", tick=tick, rid=rid)
+            return rid
+        return None
+
+
+def random_plan(seed: int, rate: float, horizon: int, slots: int,
+                kinds: Tuple[str, ...] = ("poison_row", "raise_step",
+                                          "fail_alloc")) -> FaultInjector:
+    """Derive a reproducible FaultInjector from (seed, rate): each tick in
+    ``[0, horizon)`` independently draws a fault with probability ``rate``
+    and a kind/target uniformly from ``kinds``/``slots``. Used by
+    ``serve_engine_bench.py --chaos``; the same (seed, rate, horizon,
+    slots) always yields the same plan, so a chaos regression replays
+    exactly."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    poison: Dict[int, Optional[int]] = {}
+    raises: List[int] = []
+    allocs: List[int] = []
+    for t in range(horizon):
+        if rng.random() >= rate:
+            continue
+        kind = kinds[int(rng.integers(len(kinds)))]
+        if kind == "poison_row":
+            poison[t] = int(rng.integers(slots))
+        elif kind == "poison_all":
+            poison[t] = None
+        elif kind == "raise_step":
+            raises.append(t)
+        elif kind == "fail_alloc":
+            # alloc-call indices roughly track ticks early in a run; the
+            # exact mapping does not matter for a rate sweep, only that the
+            # plan is deterministic.
+            allocs.append(t)
+        else:
+            raise ValueError(f"unknown chaos kind {kind!r}")
+    return FaultInjector(poison_logits=poison,
+                         raise_in_step=tuple(raises),
+                         fail_allocs=tuple(allocs))

@@ -55,10 +55,30 @@ admission-time value.
 Token draining is host-side: one device->host transfer of the whole
 next-token vector per tick (``np.asarray``), with per-slot lengths mirrored
 in host counters — no per-slot ``int(...)`` device syncs in the tick loop.
+
+Failure domains & degradation (docs/serving_internals.md §7 "Failure model
+& degradation ladder"): every request ends in exactly ONE terminal
+``RequestStatus`` — a fault confined to one request (oversized prompt,
+per-request deadline, cancellation, poisoned logits traced to one row,
+page exhaustion with no reclaimable admission) retires that request with
+its pages freed and its error recorded in ``stats()["failures"]``, and the
+engine keeps serving the rest. Batch-wide numeric faults walk the policy's
+format ladder instead: a cheap host-side NaN/Inf check on each tick's
+consumed logit rows escalates the batch one rung toward the anchor
+(``FormatPolicy.escalate``) and REPLAYS the tick — every attempt is a pure
+function of the pre-tick (cache, cache_len, tokens), and sampling /
+cache_len advance / token drain only commit after the guard settles, so a
+replay cannot perturb surviving streams. Only at the anchor rung does the
+engine fall back to per-row retirement (``FAILED_NUMERIC``). Chaos is
+driven by a seeded ``runtime.fault.FaultInjector`` hook, and a
+``PreemptionGuard`` passed to ``generate`` snapshots the host scheduler
+state at the next tick boundary (``checkpoint.io.save_flat``) so
+``resume()`` completes the wave with bit-identical remaining streams.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
 from typing import Dict, List, Optional
 
@@ -66,11 +86,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.core.anchor import AnchorModel, convert, materialize
 from repro.core.formats import get_format
 from repro.core.mx import MXTensor
 from repro.kernels.paged_attention import pages_read, pages_read_mq
 from repro.models.transformer import ModelApi
+from repro.runtime.fault import InjectedFault
 from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
                                        make_packed_mixed_step,
                                        make_packed_params,
@@ -112,6 +134,24 @@ def _sample_one(key, logits, temperature, top_p):
 _sample_batch = jax.jit(jax.vmap(_sample_one, in_axes=(0, 0, None, None)))
 
 
+class RequestStatus(str, enum.Enum):
+    """Lifecycle of one request. Every request ends in exactly one of the
+    terminal states; non-COMPLETED terminals carry ``Request.error`` and a
+    record in ``ElasticEngine.stats()["failures"]`` (the per-request
+    failure domain: docs/serving_internals.md §7)."""
+    QUEUED = "queued"
+    RUNNING = "running"
+    COMPLETED = "completed"              # reached max_new / cache capacity
+    FAILED_NUMERIC = "failed_numeric"    # non-finite logits at anchor rung
+    FAILED_CAPACITY = "failed_capacity"  # unservable prompt / pool starved
+    TIMED_OUT = "timed_out"              # per-request deadline_s exceeded
+    CANCELLED = "cancelled"              # cancel() / injected cancellation
+
+    @property
+    def terminal(self) -> bool:
+        return self not in (RequestStatus.QUEUED, RequestStatus.RUNNING)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -122,6 +162,20 @@ class Request:
     done: bool = False
     ttft_s: Optional[float] = None  # wall-clock from generate() entry to the
     #                                 first sampled token (set by the engine)
+    deadline_s: Optional[float] = None  # wall-clock budget from generate()
+    #                                     entry; exceeded -> TIMED_OUT at the
+    #                                     next tick boundary (resume-aware:
+    #                                     the clock spans the interruption)
+    status: RequestStatus = RequestStatus.QUEUED
+    error: Optional[str] = None     # set with any non-COMPLETED terminal
+    cancel_requested: bool = False
+
+    def cancel(self) -> None:
+        """Ask the engine to retire this request as CANCELLED at the next
+        tick boundary (queued, mid-prefill, or decoding alike). Safe to
+        call from outside the serving loop; already-terminal requests are
+        unaffected."""
+        self.cancel_requested = True
 
 
 class ElasticEngine:
@@ -209,7 +263,10 @@ class ElasticEngine:
                  kv_num_pages: Optional[int] = None,
                  attn_impl: Optional[str] = None,
                  prefill_chunk=None,
-                 scheduler: Optional[str] = None):
+                 scheduler: Optional[str] = None,
+                 logit_guard: bool = True,
+                 max_step_retries: int = 2,
+                 fault_injector=None):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
@@ -312,6 +369,28 @@ class ElasticEngine:
                     f"model family {api.cfg.family!r} has no mixed_step "
                     "entry point; use scheduler='sequential'")
         self.scheduler = scheduler
+        # ---- fault isolation (docs/serving_internals.md §7) --------------
+        # logit_guard: host-side NaN/Inf check on every tick's consumed
+        # logit rows; detection escalates the batch format one ladder rung
+        # toward the anchor and replays the tick (per-row FAILED_NUMERIC
+        # retirement only at the anchor). max_step_retries bounds same-
+        # format replays of a crashed step executable (InjectedFault).
+        self.logit_guard = logit_guard
+        self.max_step_retries = max_step_retries
+        self._fault_injector = fault_injector
+        self._faults_detected = 0
+        self._fmt_escalations = 0
+        self._escalation_events: List[dict] = []
+        self._ticks_replayed = 0
+        self._failures: List[dict] = []
+        self._status_counts: Dict[str, int] = {}
+        self._snapshots_saved = 0
+        self._resumes = 0
+        self._alloc_calls = 0
+        self._snap_step = 0
+        self.last_snapshot: Optional[str] = None
+        # Tiny jitted guard: one (rows,) bool transfer per checked tick.
+        self._finite_rows = jax.jit(lambda lg: jnp.isfinite(lg).all(axis=-1))
         self._admission_requeues = 0
         self.tick_trace: List[Dict[str, float]] = []   # reset per generate
         self._kv_pages_alloc = 0
@@ -396,11 +475,17 @@ class ElasticEngine:
     def _alloc_pages(self, free: List[int], n: int, why: str) -> List[int]:
         """Pop ``n`` physical pages off the free list, or die loudly.
 
-        Exhaustion is an error, never a silent truncation: the caller asked
-        for capacity the pool doesn't have, and the fix (bigger
-        ``kv_num_pages``, fewer slots, shorter ``max_len``) is an operator
-        decision, not something to paper over mid-decode.
+        Exhaustion is an error, never a silent truncation — but since PR 7
+        it is *contained*, not fatal: ``generate`` routes it through the
+        per-request failure path (requeue-and-wait for admissions, largest-
+        page-holder retirement with ``FAILED_CAPACITY`` for decode), so it
+        escapes the engine only on an internal free-list invariant breach.
+        The fault injector's ``fail_allocs`` hook raises ``InjectedFault``
+        (a ``RuntimeError``) here so chaos rides the same handling paths.
         """
+        self._alloc_calls += 1
+        if self._fault_injector is not None:
+            self._fault_injector.on_alloc(self._alloc_calls - 1)
         if len(free) < n:
             raise RuntimeError(
                 f"KV page pool exhausted at {why}: need {n} page(s), "
@@ -475,9 +560,187 @@ class ElasticEngine:
         return {"tokens": jnp.asarray(padded[None]),
                 "lengths": jnp.asarray([plen], jnp.int32)}
 
+    # ---- failure domains (docs/serving_internals.md §7) --------------------
+    def _finish(self, r: Request, status: RequestStatus,
+                error: Optional[str] = None) -> None:
+        """Terminal transition: exactly one per request. Non-COMPLETED
+        terminals record their error in ``stats()["failures"]`` — the
+        engine-side audit trail a caller reads after a chaotic wave."""
+        r.status = status
+        r.done = True
+        if error is not None:
+            r.error = error
+        self._status_counts[status.value] = \
+            self._status_counts.get(status.value, 0) + 1
+        if status is not RequestStatus.COMPLETED:
+            self._failures.append({"rid": r.rid, "status": status.value,
+                                   "error": error})
+
+    def _max_pages_needed(self, plen: int) -> int:
+        """Peak page count one request's admission path will ever hold:
+        pages covering the (bucket-padded) prompt plus the first decode
+        write. Under chunked admission the peak is at the FINAL chunk
+        (earlier chunks hold a prefix of it). The one home of the sizing
+        arithmetic that ``_admission_reject`` checks against the whole
+        pool."""
+        ps = self.kv_page_size
+        chunk = self.prefill_chunk
+        if chunk is None:
+            blen = _bucket_len(plen, self.prompt_capacity) if self._bucket \
+                else plen
+            return max(-(-blen // ps), plen // ps + 1)
+        start = ((plen - 1) // chunk) * chunk        # final chunk's cursor
+        take = plen - start
+        padded = _bucket_len(take, chunk) if self._bucket else take
+        end = min(start + padded, self.max_len)
+        return max(-(-end // ps), plen // ps + 1)
+
+    def _admission_reject(self, r: Request) -> Optional[str]:
+        """Why this request can NEVER be served (None = admissible): a
+        prompt past cache capacity, or (paged) a page demand beyond the
+        whole pool even when empty — for those, requeue-and-wait could
+        never succeed, so they fail fast instead of wedging the queue."""
+        plen = int(np.asarray(r.prompt).size)
+        if plen > self.prompt_capacity:
+            return (f"prompt ({plen} tokens) exceeds capacity "
+                    f"({self.prompt_capacity} = max_len - 1)")
+        if self.kv_layout == "paged":
+            need = self._max_pages_needed(plen)
+            allocatable = self._kv_total_pages - 1    # page 0 is scratch
+            if need > allocatable:
+                return (f"prompt ({plen} tokens) needs {need} KV page(s) "
+                        f"at its admission peak; the pool has only "
+                        f"{allocatable} allocatable")
+        return None
+
+    def _pop_admissible(self, pending: List[Request]) -> Optional[Request]:
+        """Next servable request off the queue head. Unservable ones
+        (``_admission_reject``) terminate FAILED_CAPACITY right here: a
+        malformed request costs itself, never the engine or the queue
+        behind it."""
+        while pending:
+            r = pending.pop(0)
+            reason = self._admission_reject(r)
+            if reason is None:
+                return r
+            self._finish(r, RequestStatus.FAILED_CAPACITY, reason)
+        return None
+
+    @staticmethod
+    def _capacity_victim(active: List[Optional[Request]],
+                         bt: np.ndarray) -> Optional[int]:
+        """Slot to retire when decode starves the pool with no admission
+        to roll back: the largest page-holder (ties -> lowest slot), i.e.
+        the retirement that frees the most pages for the survivors."""
+        best, best_pages = None, 0
+        for j, r in enumerate(active):
+            if r is None:
+                continue
+            held = int((bt[j] != 0).sum())
+            if held > best_pages:
+                best, best_pages = j, held
+        return best
+
+    @staticmethod
+    def _nan_pool_page(cache, page: int):
+        """NaN-fill physical page ``page`` of every layer's K/V pool —
+        injected persistent HBM corruption (chaos only). Unlike a logit
+        poison, replays re-read the same poisoned page, so recovery must
+        come from escalation/retirement of the rows mapping it; pages no
+        row maps (scratch, never-allocated) are provably harmless, and a
+        recycled page is fully overwritten by its next prefill."""
+        blocks = [dict(blk, **{k: blk[k].at[:, page].set(jnp.nan)
+                               for k in ("k_pages", "v_pages") if k in blk})
+                  for blk in cache["blocks"]]
+        return dict(cache, blocks=blocks)
+
+    def _escalate_or_none(self, fmt: str, tick: int,
+                          what: str) -> Optional[str]:
+        """One rung toward the anchor (quarantining the rung that just
+        misbehaved so later waves never pick it), or None at the anchor —
+        the caller then retires the affected rows instead."""
+        nxt = self.policy.escalate(fmt)
+        if nxt is None:
+            return None
+        self.policy.quarantine(fmt)
+        self._fmt_escalations += 1
+        self._escalation_events.append(
+            {"tick": tick, "from": fmt, "to": nxt, "at": what})
+        self.set_format(nxt)
+        return nxt
+
+    def _guarded_prefill(self, attempt, pinned: str, tick: int, what: str):
+        """Numeric guardrail around one admission executable (a monolithic
+        prompt or a final chunk — the ones whose logits are consumed).
+        Escalate-and-replay until finite or at the anchor; each attempt is
+        a pure function of the pre-tick cache, so replays are safe.
+        Returns ``(logits, cache, new_len, pinned, fail_reason, execs)``.
+        """
+        execs = 0
+        while True:
+            logits, cache2, new_len = attempt(pinned)
+            execs += 1
+            if not self.logit_guard or \
+                    bool(np.asarray(self._finite_rows(logits))):
+                return logits, cache2, new_len, pinned, None, execs
+            self._faults_detected += 1
+            nxt = self._escalate_or_none(pinned, tick, what)
+            if nxt is None:
+                return logits, cache2, new_len, pinned, (
+                    f"non-finite prefill logits at the anchor rung "
+                    f"({pinned}) during {what}"), execs
+            pinned = nxt
+            self._ticks_replayed += 1
+
+    def _guarded_decode(self, attempt, pinned: str, consumed: List[int],
+                        tick: int):
+        """Run one decode/mixed executable under the runtime guardrail.
+
+        Replay semantics (docs/serving_internals.md §7): every attempt is
+        a pure function of the PRE-tick ``(cache, cache_len, tokens)`` —
+        the caller commits sampling, cache_len advance, and token drain
+        only after this returns, so per-slot RNG chains stay "seed + one
+        advance per decode tick" and surviving streams are bit-identical
+        across replays. KV writes are idempotent (positions >= cache_len
+        are simply recomputed). An ``InjectedFault`` from the step retries
+        at the SAME format (transient-crash model, bounded by
+        ``max_step_retries``); non-finite logits in any *consumed* row
+        escalate the format one rung and replay; at the anchor the dead
+        rows are returned for per-row retirement.
+        Returns ``(logits, cache, pinned, dead_rows, execs)``.
+        """
+        retries = 0
+        execs = 0
+        while True:
+            try:
+                logits, cache2 = attempt(pinned)
+                execs += 1
+            except InjectedFault:
+                self._faults_detected += 1
+                if retries >= self.max_step_retries:
+                    raise
+                retries += 1
+                self._ticks_replayed += 1
+                continue
+            if not self.logit_guard or not consumed:
+                return logits, cache2, pinned, [], execs
+            finite = np.asarray(self._finite_rows(logits))
+            dead = [i for i in consumed if not finite[i]]
+            if not dead:
+                return logits, cache2, pinned, [], execs
+            self._faults_detected += 1
+            nxt = self._escalate_or_none(pinned, tick,
+                                         f"decode tick {tick}")
+            if nxt is None:
+                return logits, cache2, pinned, dead, execs
+            pinned = nxt
+            self._ticks_replayed += 1
+
     # ---- serving loop -----------------------------------------------------
     def generate(self, requests: List[Request], greedy: bool = True,
-                 fmt_override: Optional[str] = None) -> List[Request]:
+                 fmt_override: Optional[str] = None, *,
+                 guard=None, snapshot_dir: Optional[str] = None,
+                 _state: Optional[dict] = None) -> List[Request]:
         """Serve requests to completion with slot-level continuous batching.
 
         Slot lifecycle (docs/serving_internals.md "Admission & scheduling"):
@@ -487,31 +750,83 @@ class ElasticEngine:
         batched decode step; ``tick_trace`` records the per-tick work so
         that bound is testable, and each ``Request.ttft_s`` is stamped when
         its first token is sampled.
-        """
-        pending = list(requests)
-        active: List[Optional[Request]] = [None] * self.slots
-        slot_len = [0] * self.slots        # host mirror of cache_len
-        b = self.slots
-        t0 = time.perf_counter()
-        self.tick_trace = []
 
-        cache = self._init_cache(b)
-        cache_len = jnp.zeros((b,), jnp.int32)
-        tokens = jnp.zeros((b, 1), jnp.int32)
-        pinned: Optional[str] = None       # format for this batch's lifetime
+        Fault isolation (docs/serving_internals.md §7): per-request faults
+        (oversized prompt, deadline, cancellation, capacity starvation,
+        row-confined NaN at the anchor rung) end that request in a terminal
+        ``RequestStatus`` and the loop keeps serving; batch-wide numeric
+        faults escalate the pinned format one ladder rung and replay the
+        tick from pre-tick state. ``guard`` (a
+        ``runtime.fault.PreemptionGuard``) is checked at every tick
+        boundary: once triggered, the engine snapshots its host scheduler
+        state to ``snapshot_dir`` (if given) and returns with the wave
+        incomplete — ``resume(snapshot_dir)`` finishes it with bit-identical
+        remaining streams. ``_state`` is the internal resume path; callers
+        never pass it.
+        """
+        b = self.slots
         paged = self.kv_layout == "paged"
         chunk = self.prefill_chunk         # None => monolithic admission
-        filling: Optional[Request] = None  # the (single) mid-prefill request
-        fill_slot, fill_cursor = -1, 0
-        wait_pages = False  # requeued admission waits for a retire to free
-        #                     pages before trying again (avoids a hot loop)
-        if paged:
-            ps = self.kv_page_size
-            # host-side page bookkeeping: the block table mirror ships to the
-            # device as a (tiny) step argument whenever it changes; page 0 is
-            # reserved scratch, so allocatable ids are 1..P-1.
-            free_pages = list(range(self._kv_total_pages - 1, 0, -1))
-            bt = np.zeros((b, cache["block_table"].shape[1]), np.int32)
+        ps = self.kv_page_size
+        fi = self._fault_injector
+        if _state is None:
+            pending = list(requests)
+            active: List[Optional[Request]] = [None] * b
+            slot_len = [0] * b             # host mirror of cache_len
+            cache = self._init_cache(b)
+            cache_len = jnp.zeros((b,), jnp.int32)
+            tokens = jnp.zeros((b, 1), jnp.int32)
+            pinned: Optional[str] = None   # format for this batch's lifetime
+            filling: Optional[Request] = None   # the (single) mid-prefill
+            fill_slot, fill_cursor = -1, 0
+            wait_pages = False  # requeued admission waits for a retire to
+            #                     free pages before retrying (no hot loop)
+            elapsed0 = 0.0
+            tick_no = 0     # per-wave scheduler tick: keys the injector and
+            #                 survives snapshot/resume (unlike self._ticks,
+            #                 which counts only decode ticks, engine-wide)
+            if paged:
+                # host-side page bookkeeping: the block table mirror ships
+                # to the device as a (tiny) step argument whenever it
+                # changes; page 0 is reserved scratch, allocatable 1..P-1.
+                free_pages = list(range(self._kv_total_pages - 1, 0, -1))
+                bt = np.zeros((b, cache["block_table"].shape[1]), np.int32)
+            else:
+                free_pages, bt = [], None
+        else:
+            pending = _state["pending"]
+            active = _state["active"]
+            slot_len = _state["slot_len"]
+            cache = _state["cache"]
+            cache_len = _state["cache_len"]
+            tokens = _state["tokens"]
+            pinned = _state["pinned"]
+            filling = _state["filling"]
+            fill_slot = _state["fill_slot"]
+            fill_cursor = _state["fill_cursor"]
+            wait_pages = _state["wait_pages"]
+            free_pages = _state["free_pages"]
+            bt = _state["bt"]
+            elapsed0 = _state["elapsed_s"]
+            tick_no = _state["tick_no"]
+        t0 = time.perf_counter() - elapsed0  # deadline clock spans resumes
+        self.tick_trace = []
+
+        def repin(new_fmt: str) -> str:
+            # Escalation mid-wave: fmt_used stays exact for every request
+            # whose remaining tokens now come from the escalated rung.
+            for a in active:
+                if a is not None:
+                    a.fmt_used = new_fmt
+            return new_fmt
+
+        def release_slot(i: int) -> None:
+            # Pages back to the free list + block-table row -> scratch.
+            nonlocal wait_pages
+            if paged:
+                self._free_slot_pages(free_pages, bt, i)
+                cache["block_table"] = jnp.asarray(bt)
+            wait_pages = False     # freed pages: admission may retry
 
         def complete_admission(i: int, r: Request, logits) -> None:
             """prefilling -> decoding (or straight to retired): seed the
@@ -530,16 +845,86 @@ class ElasticEngine:
             r.ttft_s = time.perf_counter() - t0
             self._tokens_out += 1
             if len(r.out_tokens) >= r.max_new:
-                r.done = True              # degenerate max_new<=1
-                if paged:                  # row -> scratch BEFORE any reuse
-                    self._free_slot_pages(free_pages, bt, i)
-                    cache["block_table"] = jnp.asarray(bt)
+                self._finish(r, RequestStatus.COMPLETED)  # max_new<=1
+                release_slot(i)            # row -> scratch BEFORE any reuse
             else:
+                r.status = RequestStatus.RUNNING
                 active[i] = r
 
         while pending or filling is not None \
                 or any(a is not None for a in active):
             t_tick = time.perf_counter()
+            # ---- tick boundary: the atomic unit of fault handling. A
+            # preemption raised mid-tick (real signal or injector) is acted
+            # on HERE, with no executable in flight and host state
+            # consistent — snapshot and hand the wave back to the caller.
+            if guard is not None and guard.preempted:
+                if snapshot_dir is not None:
+                    self.last_snapshot = self._save_snapshot(
+                        snapshot_dir, requests, dict(
+                            pending=pending, active=active,
+                            slot_len=slot_len, cache=cache,
+                            cache_len=cache_len, tokens=tokens,
+                            pinned=pinned, filling=filling,
+                            fill_slot=fill_slot, fill_cursor=fill_cursor,
+                            wait_pages=wait_pages, free_pages=free_pages,
+                            bt=bt, elapsed_s=time.perf_counter() - t0,
+                            tick_no=tick_no),
+                        greedy, fmt_override)
+                    self._snapshots_saved += 1
+                return requests
+            tick = tick_no
+            tick_no += 1
+            # ---- per-request sweeps: cancellation (client- or injector-
+            # driven) and deadlines, across queued, mid-prefill, and
+            # decoding requests alike. Each hit is one terminal status and
+            # freed pages; nothing else in the batch is perturbed.
+            if fi is not None:
+                rid_cancel = fi.cancel_rid(tick)
+                if rid_cancel is not None:
+                    for r in pending + [a for a in active if a] + \
+                            ([filling] if filling is not None else []):
+                        if r.rid == rid_cancel:
+                            r.cancel_requested = True
+            now_elapsed = time.perf_counter() - t0
+
+            def expired(r):
+                if r.cancel_requested:
+                    return RequestStatus.CANCELLED, "cancelled by client"
+                if r.deadline_s is not None and now_elapsed > r.deadline_s:
+                    return (RequestStatus.TIMED_OUT,
+                            f"deadline {r.deadline_s:.3f}s exceeded "
+                            f"({now_elapsed:.3f}s into the wave)")
+                return None
+
+            for r in list(pending):
+                verdict = expired(r)
+                if verdict is not None:
+                    pending.remove(r)
+                    self._finish(r, *verdict)
+            if filling is not None:
+                verdict = expired(filling)
+                if verdict is not None:
+                    release_slot(fill_slot)
+                    self._finish(filling, *verdict)
+                    filling = None
+            for i, r in enumerate(active):
+                if r is None:
+                    continue
+                verdict = expired(r)
+                if verdict is not None:
+                    active[i] = None
+                    release_slot(i)
+                    self._finish(r, *verdict)
+            if not (pending or filling is not None
+                    or any(a is not None for a in active)):
+                break              # the sweep drained the wave
+            # Injected pool corruption lands before any executable runs.
+            if fi is not None and paged:
+                page = fi.pool_poison_page(tick)
+                if page is not None:
+                    cache = self._nan_pool_page(cache, page)
+
             if pinned is None:             # engine drained: re-pick format
                 # Load counts queued requests AND their pending prompt
                 # tokens, so a queue of long prompts downshifts before the
@@ -547,14 +932,7 @@ class ElasticEngine:
                 pinned = fmt_override or self.policy.pick(
                     queue_depth=len(pending), active=0,
                     prefill_tokens=sum(r.prompt.size for r in pending))
-            params = self.set_format(pinned)
-            use_packed = self._serves_packed(pinned)
-            prefill_slot = self._packed_prefill_slot if use_packed \
-                else self._dense_prefill_slot
-            chunk_fn = self._packed_prefill_chunk if use_packed \
-                else self._dense_prefill_chunk
-            step = self._packed_step if use_packed else self._dense_step
-            mixed_fn = self._packed_mixed if use_packed else self._dense_mixed
+            self.set_format(pinned)
             tick_pf_tokens = 0
             tick_pf_chunks = 0
             tick_execs = 0                 # executables dispatched this tick
@@ -565,28 +943,65 @@ class ElasticEngine:
                 # ---- monolithic admission: one whole prompt per free slot,
                 # active slots untouched (but stalled for the full prefill)
                 for i in range(b):
-                    if active[i] is not None or not pending:
+                    if active[i] is not None or wait_pages:
                         continue
-                    r = pending.pop(0)
+                    r = self._pop_admissible(pending)
+                    if r is None:
+                        break
+                    r.status = RequestStatus.RUNNING
                     prompt = np.asarray(r.prompt, np.int32)
-                    assert prompt.size <= self.prompt_capacity, \
-                        (f"prompt ({prompt.size}) exceeds capacity "
-                         f"({self.prompt_capacity} = max_len - 1)")
                     pbatch = self._prefill_batch(prompt)
                     if paged:
                         # Pages to hold the (possibly bucket-padded) prompt
                         # AND the first decode write at position prompt.size.
                         blen = pbatch["tokens"].shape[1]
                         need = max(-(-blen // ps), prompt.size // ps + 1)
-                        bt[i, :need] = self._alloc_pages(
-                            free_pages, need, f"admission of rid={r.rid}")
+                        try:
+                            got = self._alloc_pages(
+                                free_pages, need,
+                                f"admission of rid={r.rid}")
+                        except RuntimeError as e:
+                            # Admission never outranks running work: requeue
+                            # and wait for a retire to free pages (the
+                            # whole-pool check in _pop_admissible guarantees
+                            # the wait can end). An injected failure just
+                            # retries next tick; a real one with nothing
+                            # running means the free list leaked — raise.
+                            r.status = RequestStatus.QUEUED
+                            pending.insert(0, r)
+                            self._admission_requeues += 1
+                            if isinstance(e, InjectedFault):
+                                break
+                            if not any(a is not None for a in active):
+                                raise
+                            wait_pages = True
+                            break
+                        bt[i, :need] = got
                         cache["block_table"] = jnp.asarray(bt)
-                    logits, cache, new_len = prefill_slot(params, pbatch,
-                                                          cache, i)
+
+                    def attempt(fmt, pb=pbatch, slot=i):
+                        fn = self._packed_prefill_slot \
+                            if self._serves_packed(fmt) \
+                            else self._dense_prefill_slot
+                        lg, c2, nl = fn(self.weights_for(fmt), pb, cache,
+                                        slot)
+                        if fi is not None:
+                            lg = fi.maybe_poison_logits(tick, fmt, lg)
+                        return lg, c2, nl
+
+                    logits, cache, new_len, new_pinned, fail, execs = \
+                        self._guarded_prefill(attempt, pinned, tick,
+                                              f"prefill of rid={r.rid}")
+                    if new_pinned != pinned:
+                        pinned = repin(new_pinned)
                     tick_pf_tokens += pbatch["tokens"].shape[1]
                     tick_pf_chunks += 1
-                    tick_execs += 1
-                    tick_rows += 1
+                    tick_execs += execs
+                    tick_rows += execs
+                    if fail is not None:
+                        release_slot(i)
+                        self._finish(r, RequestStatus.FAILED_NUMERIC, fail)
+                        continue
                     cache_len = cache_len.at[i].set(new_len)
                     slot_len[i] = prompt.size
                     complete_admission(i, r, logits)
@@ -596,17 +1011,16 @@ class ElasticEngine:
                 # (release-and-requeue on exhaustion). Whether the staged
                 # chunk runs as its own executable or rides the decode batch
                 # is the scheduler's call, below.
-                if filling is None and pending and not wait_pages \
-                        and None in active:
-                    fill_slot = active.index(None)
-                    filling, fill_cursor = pending.pop(0), 0
-                    assert filling.prompt.size <= self.prompt_capacity, \
-                        (f"prompt ({filling.prompt.size}) exceeds capacity "
-                         f"({self.prompt_capacity} = max_len - 1)")
-                    # The mixed tick reads the fill row's cursor from
-                    # cache_len; zero the stale value from the slot's
-                    # previous occupant at claim time.
-                    cache_len = cache_len.at[fill_slot].set(0)
+                if filling is None and not wait_pages and None in active:
+                    cand = self._pop_admissible(pending)
+                    if cand is not None:
+                        fill_slot = active.index(None)
+                        filling, fill_cursor = cand, 0
+                        filling.status = RequestStatus.RUNNING
+                        # The mixed tick reads the fill row's cursor from
+                        # cache_len; zero the stale value from the slot's
+                        # previous occupant at claim time.
+                        cache_len = cache_len.at[fill_slot].set(0)
                 if filling is not None:
                     r, i = filling, fill_slot
                     prompt = np.asarray(r.prompt, np.int32)
@@ -628,20 +1042,27 @@ class ElasticEngine:
                             got = self._alloc_pages(
                                 free_pages, last_pg - first_pg,
                                 f"prefill chunk at {start} of rid={r.rid}")
-                        except RuntimeError:
+                        except RuntimeError as e:
                             # Partial admission must not starve the pool:
                             # release the pages already held, requeue, and
-                            # retry once a retire frees pages. With nothing
-                            # running, nothing will ever free — re-raise.
-                            if not any(a is not None for a in active):
-                                raise
+                            # retry once a retire frees pages (injected
+                            # failures retry next tick without waiting).
+                            # With nothing running and a _pop_admissible-
+                            # sized prompt, only a leaked free list gets
+                            # here — re-raise.
                             self._free_slot_pages(free_pages, bt, i)
                             cache["block_table"] = jnp.asarray(bt)
+                            r.status = RequestStatus.QUEUED
                             pending.insert(0, r)
                             filling = None
                             self._admission_requeues += 1
-                            wait_pages = True
                             ok = False
+                            if isinstance(e, InjectedFault):
+                                pass       # transient: retry next tick
+                            elif any(a is not None for a in active):
+                                wait_pages = True
+                            else:
+                                raise
                         if ok:
                             bt[i, first_pg:last_pg] = got
                             cache["block_table"] = jnp.asarray(bt)
@@ -662,19 +1083,53 @@ class ElasticEngine:
                     start, take, padded, final = chunk_tok
                     pbatch = {"tokens": jnp.asarray(ctoks[None]),
                               "lengths": jnp.asarray([plen], jnp.int32)}
-                    logits, cache, new_len = chunk_fn(params, pbatch,
-                                                      cache, i, start)
+
+                    def chunk_attempt(fmt, pb=pbatch, slot=i, st=start):
+                        fn = self._packed_prefill_chunk \
+                            if self._serves_packed(fmt) \
+                            else self._dense_prefill_chunk
+                        lg, c2, nl = fn(self.weights_for(fmt), pb, cache,
+                                        slot, st)
+                        if fi is not None:
+                            # A non-final chunk's logits are never consumed,
+                            # so a poison landing there is invisible — as a
+                            # real corruption of unread outputs would be.
+                            lg = fi.maybe_poison_logits(tick, fmt, lg)
+                        return lg, c2, nl
+
+                    if final:
+                        # Only the final chunk's logits are consumed (they
+                        # seed the first sampled token) — guard them.
+                        (logits, cache, new_len, new_pinned, fail,
+                         execs) = self._guarded_prefill(
+                             chunk_attempt, pinned, tick,
+                             f"final chunk of rid={r.rid}")
+                        if new_pinned != pinned:
+                            pinned = repin(new_pinned)
+                    else:
+                        logits, cache, new_len = chunk_attempt(pinned)
+                        fail, execs = None, 1
                     tick_pf_tokens += padded
                     tick_pf_chunks += 1
-                    tick_execs += 1
-                    tick_rows += 1
-                    cache_len = cache_len.at[i].set(new_len)
-                    fill_cursor = start + take
-                    if final:
-                        slot_len[i] = plen
-                        complete_admission(i, r, logits)
+                    tick_execs += execs
+                    tick_rows += execs
+                    if fail is not None:
+                        release_slot(i)
+                        self._finish(r, RequestStatus.FAILED_NUMERIC, fail)
                         filling = None
+                    else:
+                        cache_len = cache_len.at[i].set(new_len)
+                        fill_cursor = start + take
+                        if final:
+                            slot_len[i] = plen
+                            complete_admission(i, r, logits)
+                            filling = None
                     chunk_tok = None
+
+            # Injected preemption fires mid-tick; the guard's flag is acted
+            # on at the NEXT tick boundary, exactly like a real signal.
+            if fi is not None and guard is not None:
+                fi.maybe_preempt(tick, guard)
 
             all_free = all(a is None for a in active)
             if all_free or (chunk is not None and chunk_ran_alone
@@ -696,46 +1151,80 @@ class ElasticEngine:
             # ---- decode tick: fused step over all slots; free and
             # mid-prefill slots are masked (their cache_len doesn't advance
             # and their sampled tokens are dropped)
-            mask = np.asarray([a is not None for a in active], np.int32)
             if paged:
                 # Map the page each active slot's write position lands in
                 # BEFORE the step runs — this is where the pool grows (and
-                # where exhaustion surfaces, loudly, mid-stream).
+                # where exhaustion surfaces, contained, mid-stream).
                 dirty = False
-                for i, r in enumerate(active):
+                for i in range(b):
+                    r = active[i]
                     if r is None:
                         continue
                     pg = slot_len[i] // ps
-                    if bt[i, pg] == 0:
+                    while active[i] is not None and bt[i, pg] == 0:
                         try:
                             got = self._alloc_pages(
                                 free_pages, 1,
                                 f"decode tick for rid={r.rid}")
-                        except RuntimeError:
-                            # A decoding slot outranks a partial admission:
-                            # release the mid-prefill slot's pages (this
-                            # tick's staged chunk included), requeue it, and
-                            # retry. Restarting the admission from chunk 0
-                            # later cannot perturb its stream (the slot RNG
-                            # seeds at prefill completion). With no
-                            # admission to roll back, the pool is genuinely
-                            # overcommitted to decoders — die loudly.
-                            if filling is None:
-                                raise
-                            self._free_slot_pages(free_pages, bt, fill_slot)
-                            pending.insert(0, filling)
-                            filling = None
-                            chunk_tok = None
-                            self._admission_requeues += 1
-                            wait_pages = True
+                            bt[i, pg] = got[0]
                             dirty = True
-                            got = self._alloc_pages(
-                                free_pages, 1,
-                                f"decode tick for rid={r.rid}")
-                        bt[i, pg] = got[0]
-                        dirty = True
+                        except RuntimeError as e:
+                            dirty = True
+                            if filling is not None:
+                                # A decoding slot outranks a partial
+                                # admission: release the mid-prefill slot's
+                                # pages (this tick's staged chunk included),
+                                # requeue it, and retry. Restarting the
+                                # admission from chunk 0 later cannot
+                                # perturb its stream (the slot RNG seeds at
+                                # prefill completion).
+                                self._free_slot_pages(free_pages, bt,
+                                                      fill_slot)
+                                filling.status = RequestStatus.QUEUED
+                                pending.insert(0, filling)
+                                filling = None
+                                chunk_tok = None
+                                self._admission_requeues += 1
+                                wait_pages = True
+                                continue
+                            # No admission to roll back: the largest page-
+                            # holder retires FAILED_CAPACITY and the engine
+                            # keeps serving the rest — the pre-PR 7
+                            # behavior (raise) destroyed every in-flight
+                            # stream. The victim may be this very slot.
+                            victim = self._capacity_victim(active, bt)
+                            if victim is None:
+                                raise      # free-list invariant breach
+                            vr = active[victim]
+                            held = int((bt[victim] != 0).sum())
+                            active[victim] = None
+                            self._free_slot_pages(free_pages, bt, victim)
+                            wait_pages = False
+                            self._finish(
+                                vr, RequestStatus.FAILED_CAPACITY,
+                                f"KV pool exhausted at decode; retired as "
+                                f"largest page-holder ({held} page(s)) "
+                                f"after {len(vr.out_tokens)} token(s): {e}")
                 if dirty:
                     cache["block_table"] = jnp.asarray(bt)
+            if chunk_tok is None and all(a is None for a in active):
+                # Victim retirement emptied the batch; nothing left to run
+                # this tick. Survivors-to-be (queued work) admit next tick.
+                self._record_tick(tick_pf_tokens, tick_pf_chunks, 0,
+                                  time.perf_counter() - t_tick,
+                                  execs=tick_execs, rows=tick_rows,
+                                  decode_rows=0)
+                if filling is None:
+                    pinned = None
+                continue
+
+            mask = np.asarray([a is not None for a in active], np.int32)
+            # Rows whose logits this tick actually consumes — the guard
+            # checks exactly these (free/masked rows may hold garbage).
+            consumed = [i for i in range(b) if active[i] is not None]
+            if chunk_tok is not None and chunk_tok[3] \
+                    and filling is not None:
+                consumed.append(fill_slot)
             if chunk_tok is not None:
                 # ---- mixed tick: the staged chunk rides the decode batch as
                 # ONE executable. Decode rows keep their 1-token budget in
@@ -748,23 +1237,46 @@ class ElasticEngine:
                     .at[fill_slot].set(jnp.asarray(ctoks))
                 q_len_np = np.ones(b, np.int32)
                 q_len_np[fill_slot] = take
-                logits, cache = mixed_fn(
-                    params, {"tokens": tok2d,
-                             "q_len": jnp.asarray(q_len_np)},
-                    cache, cache_len)
+                batch_mx = {"tokens": tok2d, "q_len": jnp.asarray(q_len_np)}
+
+                def attempt(fmt, bm=batch_mx):
+                    if fi is not None:
+                        fi.maybe_raise_step(tick)
+                    fn = self._packed_mixed if self._serves_packed(fmt) \
+                        else self._dense_mixed
+                    lg, c2 = fn(self.weights_for(fmt), bm, cache, cache_len)
+                    if fi is not None:
+                        lg = fi.maybe_poison_logits(tick, fmt, lg)
+                    return lg, c2
+            else:
+                def attempt(fmt):
+                    if fi is not None:
+                        fi.maybe_raise_step(tick)
+                    fn = self._packed_step if self._serves_packed(fmt) \
+                        else self._dense_step
+                    lg, c2 = fn(self.weights_for(fmt), {"tokens": tokens},
+                                cache, cache_len)
+                    if fi is not None:
+                        lg = fi.maybe_poison_logits(tick, fmt, lg)
+                    return lg, c2
+
+            # Escalate-and-replay runs HERE, against pre-tick state; the
+            # commits below (cache_len advance, batched draw, token drain)
+            # happen exactly once, after the guard settles.
+            logits, cache, new_pinned, dead, execs = self._guarded_decode(
+                attempt, pinned, consumed, tick)
+            if new_pinned != pinned:
+                pinned = repin(new_pinned)
+            tick_execs += execs
+            tick_rows += b * execs
+            if chunk_tok is not None:
                 adv = mask.copy()
                 adv[fill_slot] = take
                 cache_len = cache_len + jnp.asarray(adv)
                 tick_pf_tokens += padded
                 tick_pf_chunks += 1
-                tick_execs += 1
-                tick_rows += b
             else:
-                logits, cache = step(params, {"tokens": tokens},
-                                     cache, cache_len)
                 cache_len = cache_len + jnp.asarray(mask)
-                tick_execs += 1
-                tick_rows += b
             # The batched draw advances EVERY slot key once per decode-
             # carrying tick — the fill row's draw is discarded, and if its
             # chunk completed this tick, complete_admission reseeds the key
@@ -803,6 +1315,29 @@ class ElasticEngine:
                 else:
                     self._attn_tokens_read += ps
 
+            # ---- dead rows (non-finite logits at the anchor rung): the
+            # fault is confined to these requests — retire them BEFORE the
+            # drain so no poisoned token ever enters a stream; every other
+            # slot's draw this tick is untouched.
+            for i in dead:
+                if filling is not None and i == fill_slot:
+                    release_slot(i)
+                    self._finish(
+                        filling, RequestStatus.FAILED_NUMERIC,
+                        f"non-finite final-chunk logits in this request's "
+                        f"row at the anchor rung ({pinned}), tick {tick}")
+                    filling = None
+                    continue
+                r_dead = active[i]
+                if r_dead is None:
+                    continue
+                active[i] = None
+                release_slot(i)
+                self._finish(
+                    r_dead, RequestStatus.FAILED_NUMERIC,
+                    f"non-finite logits in this request's row at the "
+                    f"anchor rung ({pinned}), tick {tick}")
+
             # ---- retire: ONE host transfer per tick drains every slot
             drained = np.asarray(nxt)
             for i, r in enumerate(active):
@@ -813,19 +1348,17 @@ class ElasticEngine:
                 self._tokens_out += 1
                 if len(r.out_tokens) >= r.max_new or \
                         slot_len[i] >= self.prompt_capacity:
-                    r.done = True
+                    self._finish(r, RequestStatus.COMPLETED)
                     active[i] = None       # slot re-admissible next tick
-                    if paged:              # pages recycle on the next admit
-                        self._free_slot_pages(free_pages, bt, i)
-                        cache["block_table"] = jnp.asarray(bt)
-                    wait_pages = False     # freed pages: admission may retry
+                    release_slot(i)        # pages recycle on the next admit
             if chunk_tok is not None:
                 # ---- mixed-tick chunk epilogue: advance the cursor, and if
                 # the chunk reached the prompt end, complete admission from
                 # the fill row's logits — AFTER the batched draw above, so
                 # the reseed overwrites the discarded draw's key advance.
+                # (A dead fill row already retired FAILED_NUMERIC above.)
                 fill_cursor = start + take
-                if final:
+                if final and filling is not None:
                     slot_len[fill_slot] = plen
                     complete_admission(fill_slot, filling, logits[fill_slot])
                     filling = None
@@ -890,6 +1423,198 @@ class ElasticEngine:
         self._slot_keys = self._slot_keys.at[slot].set(new_key[0])
         return toks
 
+    # ---- snapshot / resume (docs/serving_internals.md §7) ------------------
+    @staticmethod
+    def _encode_leaf(x) -> np.ndarray:
+        """``np.savez`` degrades ml_dtypes leaves (bfloat16) to opaque void
+        bytes; widen them to float32 (exact — every bf16 is an f32) for the
+        archive. ``resume`` casts each leaf back through the cache
+        template's dtype, so the round trip is bit-faithful."""
+        a = np.asarray(x)
+        if a.dtype.kind not in "iufb" or a.dtype == np.dtype(jnp.bfloat16):
+            a = a.astype(np.float32)
+        return a
+
+    def _snapshot_fingerprint(self) -> dict:
+        """The engine-config facts a snapshot's cache arrays and scheduler
+        state are only meaningful under. ``resume`` refuses a snapshot whose
+        fingerprint differs — silently resuming onto a different layout
+        would corrupt streams, not fail loudly."""
+        return {
+            "family": self.api.cfg.family,
+            "slots": self.slots,
+            "max_len": self.max_len,
+            "kv_layout": self.kv_layout,
+            "kv_page_size": self.kv_page_size,
+            "kv_total_pages": self._kv_total_pages,
+            "attn_impl": self.attn_impl,
+            "fused": bool(self.fused),
+            "packed": self.packed,
+            "prefill_chunk": self.prefill_chunk,
+            "scheduler": self.scheduler,
+            "bucket": self._bucket,
+            "temperature": self.temperature,
+            "top_p": self.top_p,
+        }
+
+    def _save_snapshot(self, root: str, requests: List[Request], st: dict,
+                       greedy: bool, fmt_override: Optional[str]) -> str:
+        """Serialize the wave's complete scheduler state at a tick boundary
+        via ``checkpoint.io.save_flat`` (atomic, manifest-driven). Arrays:
+        the KV cache's flattened leaves, cache_len/tokens, the RNG keys, the
+        block-table mirror, and each request's prompt + emitted tokens;
+        everything host-structural (queues, cursors, counters, statuses)
+        rides the manifest. ``resume`` reconstructs from these alone, so a
+        FRESH engine process (same config) can finish the wave."""
+        arrays: Dict[str, np.ndarray] = {}
+        leaves, _ = jax.tree_util.tree_flatten(st["cache"])
+        for n, leaf in enumerate(leaves):
+            arrays[f"cache_{n:04d}"] = self._encode_leaf(leaf)
+        arrays["cache_len"] = np.asarray(st["cache_len"])
+        arrays["tokens"] = np.asarray(st["tokens"])
+        arrays["slot_keys"] = np.asarray(self._slot_keys)
+        arrays["engine_key"] = np.asarray(self._key)
+        if st["bt"] is not None:
+            arrays["bt"] = np.asarray(st["bt"])
+        for r in requests:
+            arrays[f"prompt_{r.rid}"] = np.asarray(r.prompt, np.int32)
+            # int64 + explicit dtype: an empty out_tokens list must not
+            # round-trip as float64.
+            arrays[f"out_{r.rid}"] = np.asarray(r.out_tokens, np.int64)
+        meta = {
+            "kind": "elastic-engine-snapshot",
+            "fingerprint": self._snapshot_fingerprint(),
+            "greedy": bool(greedy),
+            "fmt_override": fmt_override,
+            "pinned": st["pinned"],
+            "elapsed_s": float(st["elapsed_s"]),
+            "tick_no": int(st["tick_no"]),
+            "requests": [{"rid": r.rid, "max_new": int(r.max_new),
+                          "status": r.status.value, "error": r.error,
+                          "fmt_used": r.fmt_used, "ttft_s": r.ttft_s,
+                          "deadline_s": r.deadline_s, "done": bool(r.done),
+                          "cancel_requested": bool(r.cancel_requested)}
+                         for r in requests],
+            "pending": [r.rid for r in st["pending"]],
+            "active": [(a.rid if a is not None else None)
+                       for a in st["active"]],
+            "slot_len": [int(v) for v in st["slot_len"]],
+            "filling": (st["filling"].rid if st["filling"] is not None
+                        else None),
+            "fill_slot": int(st["fill_slot"]),
+            "fill_cursor": int(st["fill_cursor"]),
+            "wait_pages": bool(st["wait_pages"]),
+            "free_pages": [int(p) for p in st["free_pages"]],
+            "quarantined": sorted(self.policy.quarantined),
+            "counters": {
+                "ticks": self._ticks,
+                "tokens_out": self._tokens_out,
+                "kv_pages_alloc": self._kv_pages_alloc,
+                "kv_pages_freed": self._kv_pages_freed,
+                "kv_pages_hwm": self._kv_pages_hwm,
+                "faults_detected": self._faults_detected,
+                "fmt_escalations": self._fmt_escalations,
+                "ticks_replayed": self._ticks_replayed,
+                "admission_requeues": self._admission_requeues,
+                "attn_tokens_read": self._attn_tokens_read,
+                "status_counts": self._status_counts,
+                "failures": self._failures,
+                "escalation_events": self._escalation_events,
+            },
+        }
+        self._snap_step += 1
+        return ckpt_io.save_flat(root, self._snap_step, arrays,
+                                 extra_meta=meta)
+
+    def resume(self, snapshot_dir: str, *, guard=None,
+               step: Optional[int] = None) -> List[Request]:
+        """Finish a preempted wave from its snapshot (LATEST by default).
+
+        Reconstructs the Request objects, scheduler queues, KV cache, and
+        RNG streams saved by ``_save_snapshot`` and re-enters ``generate``
+        mid-wave; remaining token streams are bit-identical to the
+        uninterrupted run (each slot key advanced once per decode tick it
+        actually sat in, on either side of the cut). The engine must be
+        configured identically to the one that snapshotted — a fingerprint
+        mismatch raises ``ValueError`` rather than corrupting streams.
+        Returns the reconstructed (completed) request list."""
+        arrays, manifest = ckpt_io.restore_flat(snapshot_dir, step)
+        meta = manifest["meta"]
+        if meta.get("kind") != "elastic-engine-snapshot":
+            raise ValueError(
+                f"{snapshot_dir} holds {meta.get('kind')!r}, not an "
+                "elastic-engine-snapshot")
+        fp_saved = meta["fingerprint"]
+        fp_now = self._snapshot_fingerprint()
+        if fp_saved != fp_now:
+            diff = {k: {"snapshot": fp_saved.get(k), "engine": fp_now.get(k)}
+                    for k in sorted(set(fp_saved) | set(fp_now))
+                    if fp_saved.get(k) != fp_now.get(k)}
+            raise ValueError(
+                "snapshot/engine fingerprint mismatch — resume requires an "
+                f"identically configured engine; differs on: {diff}")
+        tmpl_leaves, treedef = jax.tree_util.tree_flatten(
+            jax.eval_shape(lambda: self._init_cache(self.slots)))
+        cache = jax.tree_util.tree_unflatten(treedef, [
+            jnp.asarray(arrays[f"cache_{n:04d}"]).astype(t.dtype)
+            for n, t in enumerate(tmpl_leaves)])
+        self._key = jnp.asarray(arrays["engine_key"])
+        self._slot_keys = jnp.asarray(arrays["slot_keys"])
+        by_rid: Dict[int, Request] = {}
+        requests: List[Request] = []
+        for rd in meta["requests"]:
+            r = Request(rid=rd["rid"], prompt=arrays[f"prompt_{rd['rid']}"],
+                        max_new=rd["max_new"])
+            r.out_tokens = [int(t) for t in arrays[f"out_{rd['rid']}"]]
+            r.status = RequestStatus(rd["status"])
+            r.error = rd["error"]
+            r.fmt_used = rd["fmt_used"]
+            r.ttft_s = rd["ttft_s"]
+            r.deadline_s = rd["deadline_s"]
+            r.done = rd["done"]
+            r.cancel_requested = rd["cancel_requested"]
+            by_rid[r.rid] = r
+            requests.append(r)
+        c = meta["counters"]
+        self._ticks = c["ticks"]
+        self._tokens_out = c["tokens_out"]
+        self._kv_pages_alloc = c["kv_pages_alloc"]
+        self._kv_pages_freed = c["kv_pages_freed"]
+        self._kv_pages_hwm = c["kv_pages_hwm"]
+        self._faults_detected = c["faults_detected"]
+        self._fmt_escalations = c["fmt_escalations"]
+        self._ticks_replayed = c["ticks_replayed"]
+        self._admission_requeues = c["admission_requeues"]
+        self._attn_tokens_read = c["attn_tokens_read"]
+        self._status_counts = dict(c["status_counts"])
+        self._failures = list(c["failures"])
+        self._escalation_events = list(c["escalation_events"])
+        self.policy.quarantined |= set(meta["quarantined"])
+        self._resumes += 1
+        state = dict(
+            pending=[by_rid[rid] for rid in meta["pending"]],
+            active=[by_rid[rid] if rid is not None else None
+                    for rid in meta["active"]],
+            slot_len=[int(v) for v in meta["slot_len"]],
+            cache=cache,
+            cache_len=jnp.asarray(arrays["cache_len"]),
+            tokens=jnp.asarray(arrays["tokens"]),
+            pinned=meta["pinned"],
+            filling=(by_rid[meta["filling"]]
+                     if meta["filling"] is not None else None),
+            fill_slot=meta["fill_slot"],
+            fill_cursor=meta["fill_cursor"],
+            wait_pages=meta["wait_pages"],
+            free_pages=list(meta["free_pages"]),
+            bt=(np.asarray(arrays["bt"]).copy()
+                if "bt" in arrays else None),
+            elapsed_s=meta["elapsed_s"],
+            tick_no=meta["tick_no"])
+        return self.generate(requests, greedy=meta["greedy"],
+                             fmt_override=meta["fmt_override"],
+                             guard=guard, snapshot_dir=snapshot_dir,
+                             _state=state)
+
     # ---- introspection ----------------------------------------------------
     @property
     def stats(self):
@@ -923,6 +1648,16 @@ class ElasticEngine:
             "kv_pages_alloc": self._kv_pages_alloc,
             "kv_pages_freed": self._kv_pages_freed,
             "kv_pages_hwm": self._kv_pages_hwm,
+            "logit_guard": self.logit_guard,
+            "faults_detected": self._faults_detected,
+            "fmt_escalations": self._fmt_escalations,
+            "escalation_events": list(self._escalation_events),
+            "ticks_replayed": self._ticks_replayed,
+            "request_statuses": dict(self._status_counts),
+            "failures": list(self._failures),
+            "snapshots_saved": self._snapshots_saved,
+            "resumes": self._resumes,
+            "quarantined_formats": sorted(self.policy.quarantined),
             "attn_impl": self.attn_impl,
             "attn_tokens_read": self._attn_tokens_read,
             "attn_read_bytes": self._attn_tokens_read

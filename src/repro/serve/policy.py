@@ -14,11 +14,18 @@ those prompts occupy the engine for many ticks. Counting them up front makes
 the downshift fire BEFORE a long admission starts — the format is pinned for
 each batch wave, so a decision made from queue depth alone would ride out
 the whole admission at too high a precision.
+
+The ladder is also the engine's **degradation axis** (docs/
+serving_internals.md §7): when a rung misbehaves at runtime (NaN/Inf tick
+logits), the engine walks ``escalate(fmt)`` one rung toward the anchor and
+replays the tick, and ``quarantine(fmt)`` keeps ``pick`` from handing out
+the misbehaving rung to later batch waves. The anchor itself is never
+skipped — it is the checkpoint's native precision, the end of the ladder.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Set, Tuple
 
 
 @dataclasses.dataclass
@@ -37,6 +44,31 @@ class FormatPolicy:
     _last: str = dataclasses.field(default="", init=False)
     _stable: int = dataclasses.field(default=0, init=False)
     history: List[str] = dataclasses.field(default_factory=list, init=False)
+    quarantined: Set[str] = dataclasses.field(default_factory=set,
+                                              init=False)
+
+    def escalate(self, fmt: str) -> Optional[str]:
+        """One rung toward the anchor on the degradation ladder, or None
+        when ``fmt`` is already the anchor / unknown to the ladder (there
+        is nowhere safer to go — the caller falls back to per-request
+        retirement, docs/serving_internals.md §7). The ladder is ordered
+        deepest-queue (lowest precision) first, so "up" is the next entry.
+        """
+        if fmt == self.anchor:
+            return None
+        fmts = [f for _, f in self.ladder]
+        try:
+            i = fmts.index(fmt)
+        except ValueError:
+            return None
+        return fmts[i + 1] if i + 1 < len(fmts) else None
+
+    def quarantine(self, fmt: str) -> None:
+        """Bar ``fmt`` from future ``pick``s (the engine calls this when a
+        rung's logits go non-finite). The anchor is exempt: it is the
+        checkpoint's native precision and the ladder's terminal rung."""
+        if fmt != self.anchor:
+            self.quarantined.add(fmt)
 
     def pick(self, queue_depth: int, active: int = 0,
              prefill_tokens: int = 0) -> str:
@@ -46,6 +78,8 @@ class FormatPolicy:
             if load >= thresh:
                 target = fmt
                 break
+        while target in self.quarantined:
+            target = self.escalate(target) or self.anchor
         if self._last and target != self._last:
             self._stable += 1
             if self._stable < self.hysteresis:

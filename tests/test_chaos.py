@@ -1,0 +1,431 @@
+"""Chaos suite for the fault-isolated serving engine (engine.py +
+runtime/fault.py + policy escalate/quarantine + snapshot/resume).
+
+The contract under test (docs/serving_internals.md §7 "Failure model &
+degradation ladder"):
+
+  - every request ends in exactly ONE terminal RequestStatus, with the
+    error recorded in stats()["failures"] for non-COMPLETED terminals;
+  - a fault confined to one request (poisoned row, oversized prompt,
+    deadline, cancellation, pool starvation) retires THAT request; the
+    survivors' token streams are bit-identical to a fault-free run;
+  - batch-wide numeric faults escalate the pinned format one ladder rung
+    toward the anchor and REPLAY the tick from pre-tick state — a
+    transient fault therefore leaves ALL streams bit-identical;
+  - the page free list never leaks: kv_pages_alloc == kv_pages_freed once
+    the wave drains, in every scenario;
+  - a PreemptionGuard interruption snapshots at the tick boundary and a
+    FRESH engine resumes with bit-identical remaining streams.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import make_anchor
+from repro.core.qat import QATConfig
+from repro.models import get_model
+from repro.runtime.fault import FaultInjector, PreemptionGuard
+from repro.serve.engine import ElasticEngine, Request, RequestStatus
+
+QAT = QATConfig(formats=("mxint4", "mxint6", "mxint8"), anchor="mxint8",
+                block_size=32)
+PS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("smollm-135m")
+    api = get_model(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    anchor = make_anchor(params, QAT)
+    return cfg, api, params, anchor
+
+
+def _engine(api, anchor, params, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("kv_page_size", PS)
+    return ElasticEngine(api, anchor, param_template=params, **kw)
+
+
+def _reqs(cfg, n, max_new=5, plen=8, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, plen)
+                    .astype(np.int32), max_new=max_new) for i in range(n)]
+
+
+def _baseline(setup, n=3, **kw):
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params, **kw)
+    reqs = _reqs(cfg, n)
+    eng.generate(reqs, fmt_override="mxint8")
+    return [r.out_tokens for r in reqs]
+
+
+def _assert_no_leak(eng):
+    st = eng.stats
+    assert st["kv_pages_alloc"] == st["kv_pages_freed"], \
+        (st["kv_pages_alloc"], st["kv_pages_freed"])
+
+
+def _assert_all_terminal(reqs):
+    for r in reqs:
+        assert r.done and r.status.terminal, (r.rid, r.status)
+        if r.status is not RequestStatus.COMPLETED:
+            assert r.error, (r.rid, r.status)
+
+
+# ---- row-confined numeric fault -------------------------------------------
+def test_row_poison_at_anchor_confines_to_one_request(setup):
+    """NaN traced to ONE row at the anchor rung: that request retires
+    FAILED_NUMERIC with no poisoned token in its stream; every survivor's
+    stream is bit-identical to the fault-free run."""
+    cfg, api, params, anchor = setup
+    base = _baseline(setup)
+    fi = FaultInjector(poison_logits={2: 0})
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint8")
+    _assert_all_terminal(reqs)
+    assert reqs[0].status is RequestStatus.FAILED_NUMERIC
+    assert "anchor rung" in reqs[0].error
+    # the poisoned tick's would-be token never entered the stream
+    assert all(np.isfinite(t) for t in reqs[0].out_tokens)
+    for r, b in zip(reqs, base):
+        if r.status is RequestStatus.COMPLETED:
+            assert r.out_tokens == b
+    assert eng.stats["request_statuses"]["failed_numeric"] == 1
+    assert eng.stats["failures"][0]["rid"] == 0
+    _assert_no_leak(eng)
+
+
+def test_transient_step_crash_replays_bit_identical(setup):
+    """An InjectedFault out of the step executable retries at the SAME
+    format; since the attempt is a pure function of pre-tick state, ALL
+    streams match the fault-free run bit for bit."""
+    cfg, api, params, anchor = setup
+    base = _baseline(setup)
+    fi = FaultInjector(raise_in_step=(1, 3))
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint8")
+    assert [r.out_tokens for r in reqs] == base
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    assert eng.stats["ticks_replayed"] >= 2
+    assert eng.stats["fmt_escalations"] == 0      # same-format replay
+    _assert_no_leak(eng)
+
+
+def test_step_crash_beyond_retry_budget_raises(setup):
+    """A fault that persists past max_step_retries is not a transient —
+    the engine refuses to spin and re-raises (supervisor's problem)."""
+    from repro.runtime.fault import InjectedFault
+    cfg, api, params, anchor = setup
+    fi = FaultInjector(raise_in_step=(2,))
+    eng = _engine(api, anchor, params, fault_injector=fi,
+                  max_step_retries=0)
+    with pytest.raises(InjectedFault):
+        eng.generate(_reqs(cfg, 2), fmt_override="mxint8")
+
+
+# ---- format-ladder degradation --------------------------------------------
+def test_bad_rung_escalates_and_quarantines(setup):
+    """Batch-wide NaN that follows the FORMAT (the bad-rung model): the
+    engine walks mxint4 -> mxint6, replays the tick, finishes every stream
+    finite, and quarantines the bad rung from future picks."""
+    cfg, api, params, anchor = setup
+    fi = FaultInjector(poison_logits={2: None}, poison_fmt="mxint4")
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint4")
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    st = eng.stats
+    assert st["fmt_escalations"] == 1
+    ev = st["escalation_events"][0]
+    assert (ev["from"], ev["to"]) == ("mxint4", "mxint6")
+    assert st["quarantined_formats"] == ["mxint4"]
+    # the escalated batch's requests carry the new rung exactly (rid 2
+    # admits after the wave drains, where fmt_override re-picks mxint4 —
+    # override is explicit operator intent and bypasses quarantine)
+    assert reqs[0].fmt_used == reqs[1].fmt_used == "mxint6"
+    assert eng.policy.pick(queue_depth=64) != "mxint4"   # quarantine holds
+    _assert_no_leak(eng)
+
+
+def test_double_escalation_reaches_anchor(setup):
+    """Two bad rungs: mxint4 -> mxint6 -> mxint8 within one tick's replay
+    loop; the anchor serves every stream to completion."""
+    cfg, api, params, anchor = setup
+    fi = FaultInjector(poison_logits={2: None},
+                       poison_fmt=("mxint4", "mxint6"))
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint4")
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    st = eng.stats
+    assert st["fmt_escalations"] == 2
+    assert [e["to"] for e in st["escalation_events"]] == \
+        ["mxint6", "mxint8"]
+    assert sorted(st["quarantined_formats"]) == ["mxint4", "mxint6"]
+    assert reqs[0].fmt_used == reqs[1].fmt_used == "mxint8"
+    _assert_no_leak(eng)
+
+
+def test_escalation_exhausted_retires_rows_not_wave(setup):
+    """Poison that follows the ANCHOR has nowhere to escalate: the affected
+    (= all consumed) rows retire FAILED_NUMERIC, and queued work admits on
+    later ticks and completes untouched."""
+    cfg, api, params, anchor = setup
+    fi = FaultInjector(poison_logits={2: None}, poison_fmt="mxint8")
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)       # 2 slots: rids 0,1 active at tick 2; rid 2 queued
+    eng.generate(reqs, fmt_override="mxint8")
+    _assert_all_terminal(reqs)
+    assert reqs[0].status is RequestStatus.FAILED_NUMERIC
+    assert reqs[1].status is RequestStatus.FAILED_NUMERIC
+    assert reqs[2].status is RequestStatus.COMPLETED
+    assert eng.stats["fmt_escalations"] == 0
+    _assert_no_leak(eng)
+
+
+def test_final_chunk_poison_at_anchor_fails_that_admission(setup):
+    """Chunked admission: only the FINAL chunk's logits are consumed (they
+    seed the first token), so that is where the guard bites — the filling
+    request retires FAILED_NUMERIC and the queue behind it is served."""
+    cfg, api, params, anchor = setup
+    fi = FaultInjector(poison_logits={2: None}, poison_fmt="mxint8")
+    eng = _engine(api, anchor, params, batch_slots=1, prefill_chunk=PS,
+                  fault_injector=fi)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=0, prompt=rng.integers(0, cfg.vocab, 20)
+                    .astype(np.int32), max_new=3),     # final chunk: tick 2
+            Request(rid=1, prompt=rng.integers(0, cfg.vocab, 8)
+                    .astype(np.int32), max_new=3)]
+    eng.generate(reqs, fmt_override="mxint8")
+    assert reqs[0].status is RequestStatus.FAILED_NUMERIC
+    assert "final-chunk" in reqs[0].error or "final chunk" in reqs[0].error
+    assert reqs[0].out_tokens == []        # never sampled a token
+    assert reqs[1].status is RequestStatus.COMPLETED
+    _assert_no_leak(eng)
+
+
+# ---- injected pool corruption ---------------------------------------------
+def test_pool_poison_of_unmapped_page_is_harmless(setup):
+    """NaN-filling a physical page NO row maps cannot perturb any stream —
+    the block table is the only path from pages to attention."""
+    cfg, api, params, anchor = setup
+    base = _baseline(setup)
+    eng0 = _engine(api, anchor, params)
+    last_page = eng0.stats["kv_total_pages"] - 1   # allocated last, if ever
+    fi = FaultInjector(poison_pool={1: last_page})
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint8")
+    assert [r.out_tokens for r in reqs] == base
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    _assert_no_leak(eng)
+
+
+def test_pool_poison_of_live_page_retires_its_row(setup):
+    """Persistent HBM corruption of a LIVE page: replay re-reads the same
+    NaNs, so recovery must come from retiring the row that maps the page —
+    at the anchor rung that is FAILED_NUMERIC for exactly that request."""
+    cfg, api, params, anchor = setup
+    base = _baseline(setup)
+    # page 1 is the first page popped: slot 0's prompt page
+    fi = FaultInjector(poison_pool={2: 1})
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint8")
+    _assert_all_terminal(reqs)
+    assert reqs[0].status is RequestStatus.FAILED_NUMERIC
+    for r, b in zip(reqs, base):
+        if r.status is RequestStatus.COMPLETED:
+            assert r.out_tokens == b
+    _assert_no_leak(eng)
+
+
+# ---- capacity faults -------------------------------------------------------
+def test_injected_alloc_failure_retries_and_completes(setup):
+    """A transient allocation failure requeues the admission (pages
+    untouched) and the retry next tick serves it: same streams, one
+    requeue, no leak."""
+    cfg, api, params, anchor = setup
+    base = _baseline(setup)
+    fi = FaultInjector(fail_allocs=(0,))   # first-ever admission alloc
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint8")
+    assert [r.out_tokens for r in reqs] == base
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    assert eng.stats["admission_requeues"] >= 1
+    _assert_no_leak(eng)
+
+
+def test_decode_starvation_retires_largest_holder(setup):
+    """Real exhaustion mid-decode with no admission to roll back: the
+    LARGEST page-holder retires FAILED_CAPACITY (frees the most pages) and
+    the smaller request completes — with the same stream as a roomy run."""
+    cfg, api, params, anchor = setup
+    rng = np.random.default_rng(5)
+    mk = lambda: [Request(rid=0, prompt=p0.copy(), max_new=12),
+                  Request(rid=1, prompt=p1.copy(), max_new=12)]
+    p0 = rng.integers(0, cfg.vocab, 8).astype(np.int32)    # 2 pages held
+    p1 = rng.integers(0, cfg.vocab, 16).astype(np.int32)   # 3 pages held
+    roomy = _engine(api, anchor, params)
+    ref = mk()
+    roomy.generate(ref, fmt_override="mxint8")
+
+    eng = _engine(api, anchor, params, kv_num_pages=6)  # 5 allocatable
+    reqs = mk()
+    eng.generate(reqs, fmt_override="mxint8")           # must NOT raise
+    _assert_all_terminal(reqs)
+    assert reqs[1].status is RequestStatus.FAILED_CAPACITY
+    assert "largest page-holder" in reqs[1].error
+    assert reqs[0].status is RequestStatus.COMPLETED
+    assert reqs[0].out_tokens == ref[0].out_tokens
+    _assert_no_leak(eng)
+
+
+def test_oversized_prompt_fails_fast_queue_unharmed(setup):
+    """A prompt past capacity costs itself, never the queue behind it."""
+    cfg, api, params, anchor = setup
+    base = _baseline(setup)
+    rng = np.random.default_rng(9)
+    big = Request(rid=99, prompt=rng.integers(0, cfg.vocab, 40)
+                  .astype(np.int32), max_new=3)        # > max_len - 1 = 31
+    eng = _engine(api, anchor, params)
+    reqs = [big] + _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint8")
+    assert big.status is RequestStatus.FAILED_CAPACITY
+    assert "exceeds capacity" in big.error
+    assert [r.out_tokens for r in reqs[1:]] == base
+    _assert_no_leak(eng)
+
+
+# ---- deadlines & cancellation ----------------------------------------------
+def test_deadline_and_cancel_are_per_request(setup):
+    """A zero deadline and an injected cancellation each retire exactly
+    their own request at a tick boundary; the survivor's stream is
+    bit-identical to the fault-free run."""
+    cfg, api, params, anchor = setup
+    base = _baseline(setup)
+    fi = FaultInjector(cancel_at={0: 2})
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    reqs[1].deadline_s = 0.0
+    eng.generate(reqs, fmt_override="mxint8")
+    assert reqs[0].status is RequestStatus.COMPLETED
+    assert reqs[0].out_tokens == base[0]
+    assert reqs[1].status is RequestStatus.TIMED_OUT
+    assert "deadline" in reqs[1].error
+    assert reqs[2].status is RequestStatus.CANCELLED
+    counts = eng.stats["request_statuses"]
+    assert counts == {"completed": 1, "timed_out": 1, "cancelled": 1}
+    _assert_no_leak(eng)
+
+
+def test_client_cancel_mid_flight(setup):
+    """Request.cancel() from outside the loop retires the request at the
+    next tick boundary, pages freed."""
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params)
+    reqs = _reqs(cfg, 2)
+    reqs[0].cancel()                      # pre-cancelled: dies at tick 0
+    eng.generate(reqs, fmt_override="mxint8")
+    assert reqs[0].status is RequestStatus.CANCELLED
+    assert reqs[0].out_tokens == []
+    assert reqs[1].status is RequestStatus.COMPLETED
+    _assert_no_leak(eng)
+
+
+# ---- preemption, snapshot, resume ------------------------------------------
+def test_preempt_snapshot_fresh_engine_resume_bit_identical(setup, tmp_path):
+    """The headline resilience claim: an injected preemption mid-wave
+    snapshots at the tick boundary; a FRESH engine (same config) resumes
+    and every finished stream is bit-identical to the uninterrupted run.
+    The leak invariant spans BOTH processes."""
+    cfg, api, params, anchor = setup
+    base = _baseline(setup)
+    fi = FaultInjector(preempt_at=2)
+    g = PreemptionGuard()
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 3)
+    eng.generate(reqs, fmt_override="mxint8", guard=g,
+                 snapshot_dir=str(tmp_path))
+    assert g.preempted
+    assert eng.last_snapshot is not None
+    assert not all(r.done for r in reqs)  # genuinely interrupted
+    assert eng.stats["snapshots_saved"] == 1
+
+    fresh = _engine(api, anchor, params)  # no injector, no shared state
+    done = fresh.resume(str(tmp_path))
+    assert all(r.status is RequestStatus.COMPLETED for r in done)
+    assert [r.out_tokens for r in done] == base
+    assert fresh.stats["resumes"] == 1
+    _assert_no_leak(fresh)
+
+
+def test_resume_fingerprint_mismatch_raises(setup, tmp_path):
+    """Resuming onto a differently-configured engine must refuse loudly,
+    naming the differing facts — never corrupt streams silently."""
+    cfg, api, params, anchor = setup
+    fi = FaultInjector(preempt_at=1)
+    g = PreemptionGuard()
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    eng.generate(_reqs(cfg, 2), fmt_override="mxint8", guard=g,
+                 snapshot_dir=str(tmp_path))
+    other = _engine(api, anchor, params, max_len=64)
+    with pytest.raises(ValueError, match="fingerprint mismatch") as ei:
+        other.resume(str(tmp_path))
+    assert "max_len" in str(ei.value)     # the differing fact is named
+
+
+# ---- chaos storm (slow) ----------------------------------------------------
+@pytest.mark.slow
+def test_seeded_chaos_storm_invariants(setup):
+    """random_plan at a high rate over many requests: whatever fires, every
+    request terminates with a status, the free list balances, and the
+    engine's failure ledger matches the per-request terminals."""
+    cfg, api, params, anchor = setup
+    fi = random_plan_storm()
+    eng = _engine(api, anchor, params, fault_injector=fi)
+    reqs = _reqs(cfg, 8, max_new=6)
+    eng.generate(reqs, fmt_override="mxint8")
+    _assert_all_terminal(reqs)
+    st = eng.stats
+    assert sum(st["request_statuses"].values()) == len(reqs)
+    assert len(st["failures"]) == sum(
+        1 for r in reqs if r.status is not RequestStatus.COMPLETED)
+    _assert_no_leak(eng)
+
+
+def random_plan_storm():
+    from repro.runtime.fault import random_plan
+    return random_plan(seed=13, rate=0.25, horizon=40, slots=2,
+                       kinds=("poison_row", "raise_step", "fail_alloc"))
+
+
+@pytest.mark.slow
+def test_mixed_scheduler_survives_row_poison(setup):
+    """The mixed (prefill+decode coalesced) tick path under a row poison:
+    fault confined, survivors identical to its own fault-free run."""
+    cfg, api, params, anchor = setup
+    streams = {}
+    for chaos in (False, True):
+        fi = FaultInjector(poison_logits={4: 0}) if chaos else None
+        eng = _engine(api, anchor, params, prefill_chunk=PS,
+                      fault_injector=fi)
+        reqs = _reqs(cfg, 3, max_new=6)
+        eng.generate(reqs, fmt_override="mxint8")
+        streams[chaos] = reqs
+        _assert_no_leak(eng)
+    _assert_all_terminal(streams[True])
+    clean = {r.rid: r.out_tokens for r in streams[False]}
+    for r in streams[True]:
+        if r.status is RequestStatus.COMPLETED:
+            assert r.out_tokens == clean[r.rid]
+    assert any(r.status is RequestStatus.FAILED_NUMERIC
+               for r in streams[True])

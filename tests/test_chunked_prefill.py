@@ -183,15 +183,24 @@ def test_pool_exhaustion_mid_prefill_requeues_not_leaks(setup):
     assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
 
 
-def test_pool_exhaustion_with_nothing_running_raises(setup):
+def test_pool_exhaustion_with_nothing_running_fails_the_request(setup):
     """Requeueing only makes sense if a running slot can free pages; a lone
-    prompt that cannot fit must fail loudly, same as monolithic."""
+    prompt that can never fit fails fast at admission — FAILED_CAPACITY on
+    the request itself (its page demand is checked against the WHOLE pool
+    before any allocation), not an exception out of generate() and not a
+    wedged queue. The engine stays serviceable and nothing leaks."""
     cfg, api, params, anchor = setup
+    from repro.serve.engine import RequestStatus
     eng = _engine(api, anchor, params, max_len=32, kv_layout="paged",
                   kv_page_size=PS, prefill_chunk=CHUNK, kv_num_pages=2)
-    with pytest.raises(RuntimeError, match="KV page pool exhausted"):
-        eng.generate(_reqs(cfg, 1, plens=(22,), max_new=3),
-                     fmt_override="mxint8")
+    reqs = _reqs(cfg, 1, plens=(22,), max_new=3)
+    eng.generate(reqs, fmt_override="mxint8")     # must NOT raise
+    (r,) = reqs
+    assert r.done and r.status is RequestStatus.FAILED_CAPACITY
+    assert "KV page" in r.error and "pool has only" in r.error
+    st = eng.stats
+    assert st["kv_pages_alloc"] == st["kv_pages_freed"] == 0  # never touched
+    assert st["request_statuses"] == {"failed_capacity": 1}
 
 
 def test_chunked_rejects_unsupported_configs(setup):

@@ -76,16 +76,25 @@ def test_paged_matches_dense_seeded_sampling():
     assert streams["dense"] == streams["paged"]
 
 
-def test_page_pool_exhaustion_raises_loudly():
-    """An undersized pool must raise (admission- or decode-time), never
-    silently truncate: kv_num_pages=3 gives 2 allocatable pages of 8 tokens,
-    so one request decoding past position 16 starves the pool."""
+def test_page_pool_exhaustion_retires_not_raises():
+    """An undersized pool must never silently truncate — and since the
+    fault-isolation PR it must not kill the wave either: kv_num_pages=3
+    gives 2 allocatable pages of 8 tokens, each admission holds 2 (prompt +
+    first decode write), so decoding past position 16 starves the pool.
+    The largest page-holder retires FAILED_CAPACITY with the pool error
+    recorded, generate() returns normally, and nothing leaks."""
     cfg, api, params, anchor = _setup()
     eng = _engine(api, anchor, params, kv_layout="paged", kv_page_size=PS,
                   kv_num_pages=3)
-    with pytest.raises(RuntimeError, match="KV page pool exhausted"):
-        eng.generate(_reqs(cfg, 2, max_new=12, seed=1),
-                     fmt_override="mxint8")
+    reqs = _reqs(cfg, 2, max_new=12, seed=1)
+    eng.generate(reqs, fmt_override="mxint8")     # must NOT raise
+    from repro.serve.engine import RequestStatus
+    assert all(r.done for r in reqs)
+    assert all(r.status is RequestStatus.FAILED_CAPACITY for r in reqs)
+    assert all("KV pool exhausted" in r.error for r in reqs)
+    st = eng.stats
+    assert st["kv_pages_alloc"] == st["kv_pages_freed"]       # no leak
+    assert len(st["failures"]) == 2
 
 
 def test_pages_recycled_across_retire_admit_churn():

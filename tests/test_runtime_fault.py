@@ -1,0 +1,158 @@
+"""Fault-tolerance primitives (runtime/fault.py): PreemptionGuard flagging,
+the Watchdog's cross-thread re-raise contract, StragglerMonitor flagging,
+and the FaultInjector's fire-once / fire-per-attempt semantics.
+
+The Watchdog tests pin the daemon-thread bug fix: the default timeout
+callback runs on the WATCHDOG's thread, where a raise would kill only that
+thread and the timeout would be silently swallowed. The contract is that
+the recorded TimeoutError re-raises from the next ``heartbeat()`` (or from
+``stop()``) on the caller's thread — where it can actually abort the
+watched loop.
+"""
+import time
+
+import pytest
+
+from repro.runtime.fault import (FaultInjector, InjectedFault,
+                                 PreemptionGuard, StragglerMonitor, Watchdog,
+                                 random_plan)
+
+
+# ---- PreemptionGuard -------------------------------------------------------
+def test_guard_starts_clear_and_latches():
+    g = PreemptionGuard()
+    assert not g.preempted
+    g.trigger()
+    assert g.preempted
+    g.trigger()                      # idempotent
+    assert g.preempted
+
+
+def test_guard_context_restores_handlers():
+    import signal
+    prev = signal.getsignal(signal.SIGTERM)
+    with PreemptionGuard() as g:
+        assert signal.getsignal(signal.SIGTERM) != prev
+        assert not g.preempted
+    assert signal.getsignal(signal.SIGTERM) == prev
+
+
+# ---- Watchdog --------------------------------------------------------------
+def test_watchdog_timeout_reraises_on_callers_thread():
+    """The daemon thread records; heartbeat() raises HERE — the pre-fix
+    behavior raised on the watchdog thread and the caller never saw it."""
+    wd = Watchdog(timeout_s=0.05).start()
+    deadline = time.monotonic() + 2.0
+    while not wd.fired and time.monotonic() < deadline:
+        time.sleep(0.01)             # hang without heartbeating
+    assert wd.fired
+    with pytest.raises(TimeoutError, match="heartbeat"):
+        wd.heartbeat()
+    # one-shot: the recorded exception is consumed by the re-raise
+    wd.heartbeat()
+    wd.stop()
+
+
+def test_watchdog_stop_reraises_pending_timeout():
+    """A loop that ends without another heartbeat still sees the timeout:
+    stop() is the last re-raise point."""
+    wd = Watchdog(timeout_s=0.05).start()
+    deadline = time.monotonic() + 2.0
+    while not wd.fired and time.monotonic() < deadline:
+        time.sleep(0.01)
+    with pytest.raises(TimeoutError):
+        wd.stop()
+
+
+def test_watchdog_healthy_loop_never_raises():
+    wd = Watchdog(timeout_s=0.5).start()
+    for _ in range(5):
+        time.sleep(0.02)
+        wd.heartbeat()
+    wd.stop()
+    assert not wd.fired
+
+
+def test_watchdog_custom_callback_fires_off_thread():
+    hits = []
+    wd = Watchdog(timeout_s=0.05, on_timeout=lambda: hits.append(1)).start()
+    deadline = time.monotonic() + 2.0
+    while not wd.fired and time.monotonic() < deadline:
+        time.sleep(0.01)
+    wd.stop()                        # custom callback: nothing to re-raise
+    assert hits == [1]
+
+
+# ---- StragglerMonitor ------------------------------------------------------
+def test_straggler_flagged_only_after_window_fills():
+    mon = StragglerMonitor(window=50, threshold=2.0)
+    for s in range(8):
+        assert not mon.record(s, 0.1)      # warmup: never flags
+    assert mon.record(8, 0.5)              # 5x median
+    assert not mon.record(9, 0.15)
+    assert mon.events[0]["action"] == "flag-host-for-reschedule"
+
+
+# ---- FaultInjector ---------------------------------------------------------
+def test_alloc_fault_fires_once_per_index():
+    fi = FaultInjector(fail_allocs=(3,))
+    fi.on_alloc(2)                         # not listed: no-op
+    with pytest.raises(InjectedFault):
+        fi.on_alloc(3)
+    fi.on_alloc(3)                         # fired: subsequent calls clean
+    assert [e["kind"] for e in fi.events] == ["fail_alloc"]
+
+
+def test_step_fault_fires_once_per_tick():
+    fi = FaultInjector(raise_in_step=(5,))
+    fi.maybe_raise_step(4)
+    with pytest.raises(InjectedFault):
+        fi.maybe_raise_step(5)
+    fi.maybe_raise_step(5)                 # the replay attempt runs clean
+
+
+def test_transient_logit_poison_fires_once():
+    import jax.numpy as jnp
+    fi = FaultInjector(poison_logits={1: 0})
+    lg = jnp.zeros((2, 4))
+    out = fi.maybe_poison_logits(1, "mxint8", lg)
+    assert bool(jnp.isnan(out[0]).all()) and bool(jnp.isfinite(out[1]).all())
+    again = fi.maybe_poison_logits(1, "mxint8", lg)   # replay: clean
+    assert bool(jnp.isfinite(again).all())
+
+
+def test_fmt_scoped_poison_follows_the_format():
+    """The "bad rung" model: the poison re-fires on every attempt still at
+    a listed format, and clears only once escalation leaves it behind."""
+    import jax.numpy as jnp
+    fi = FaultInjector(poison_logits={1: None}, poison_fmt="mxint4")
+    lg = jnp.zeros((2, 4))
+    assert bool(jnp.isnan(fi.maybe_poison_logits(1, "mxint4", lg)).all())
+    assert bool(jnp.isnan(fi.maybe_poison_logits(1, "mxint4", lg)).all())
+    assert bool(jnp.isfinite(fi.maybe_poison_logits(1, "mxint6", lg)).all())
+
+
+def test_cancel_preempt_and_pool_primitives():
+    fi = FaultInjector(cancel_at={2: 7}, preempt_at=3, poison_pool={4: 1})
+    assert fi.cancel_rid(1) is None
+    assert fi.cancel_rid(2) == 7
+    assert fi.cancel_rid(2) is None        # fire-once
+    g = PreemptionGuard()
+    fi.maybe_preempt(2, g)
+    assert not g.preempted
+    fi.maybe_preempt(3, g)
+    assert g.preempted
+    assert fi.pool_poison_page(4) == 1
+    assert fi.pool_poison_page(4) is None
+
+
+def test_random_plan_is_reproducible_and_rate_scaled():
+    a = random_plan(seed=9, rate=0.3, horizon=100, slots=4)
+    b = random_plan(seed=9, rate=0.3, horizon=100, slots=4)
+    assert a.poison_logits == b.poison_logits
+    assert a.raise_in_step == b.raise_in_step
+    assert a.fail_allocs == b.fail_allocs
+    n = len(a.poison_logits) + len(a.raise_in_step) + len(a.fail_allocs)
+    assert 10 <= n <= 50               # ~30 expected; loose determinism band
+    assert random_plan(seed=10, rate=0.3, horizon=100,
+                       slots=4).poison_logits != a.poison_logits
