@@ -258,6 +258,91 @@ def bench_chaos(api, anchor, params, *, slots, max_len, n_requests,
           f"/{n_requests}")
 
 
+def bench_speculative(api, anchor, params, *, slots, max_len, n_requests,
+                      max_new, vocab, draft_fmt="mxint4", k=4, page_size=8,
+                      long_every=3, long_len=40):
+    """The --speculative sweep (docs/serving_internals.md §9): plain anchor
+    decode vs self-speculative decode (draft at ``draft_fmt``, verify at the
+    pinned anchor rung) over both packed contracts x both paged attention
+    impls. Two outputs:
+
+      - an acceptance column set: spec_ticks, acceptance_rate,
+        accepted_tok_per_tick — the measured usefulness of the cheap rung's
+        guesses on this workload;
+      - a HARD stream-identity gate (process-failing): every request's
+        token stream under speculation must be bit-identical to plain
+        anchor decode — speculation is a pure speed knob, never a token
+        knob. A second gate requires a decode-tick win (fewer verify ticks
+        than plain ticks for the same tokens): if drafting ever stops
+        paying for itself on this deterministic workload, the bench fails
+        rather than shipping a regression silently.
+    """
+    from repro.serve.policy import SpecConfig
+    rng = np.random.default_rng(0)
+    is_long = lambda i: i % long_every == 1 % long_every
+    prompts = [rng.integers(0, vocab,
+                            long_len if is_long(i) else PROMPT_LEN)
+               .astype(np.int32) for i in range(n_requests)]
+    # draft-ahead headroom: the verify frontier runs k tokens past the
+    # committed length, so size the pool for it
+    per_slot = -(-(long_len + max_new + k) // page_size)
+
+    def run(spec, fused, attn):
+        eng = ElasticEngine(
+            api, anchor, batch_slots=slots, max_len=max_len,
+            param_template=params, fused=fused, kv_layout="paged",
+            kv_page_size=page_size, kv_num_pages=slots * per_slot + 1,
+            attn_impl=attn, speculative=spec)
+        reqs = [Request(rid=i, prompt=prompts[i].copy(), max_new=max_new)
+                for i in range(n_requests)]
+        eng.generate(reqs[:WARMUP], fmt_override="mxint8")
+        t0 = time.perf_counter()
+        ticks0 = eng.stats["ticks"]
+        eng.generate(reqs[WARMUP:], fmt_override="mxint8")
+        dt = time.perf_counter() - t0
+        st = eng.stats
+        if st["kv_pages_alloc"] != st["kv_pages_freed"]:
+            raise SystemExit(
+                f"speculative run leaked KV pages: {st['kv_pages_alloc']} "
+                f"allocated, {st['kv_pages_freed']} freed")
+        return (st["ticks"] - ticks0, st,
+                [list(r.out_tokens) for r in reqs], dt)
+
+    print("spec,path,attn,draft,k,ticks_plain,ticks_spec,spec_ticks,"
+          "acceptance_rate,accepted_tok_per_tick,tok_per_tick_plain,"
+          "tok_per_tick_spec,wall_plain_s,wall_spec_s")
+    wins = []
+    for fused in (False, True):
+        for attn in ("gather", "paged_kernel"):
+            ticks_p, _, streams_p, dt_p = run(None, fused, attn)
+            sc = SpecConfig(draft_fmt=draft_fmt, k=k)
+            ticks_s, st, streams_s, dt_s = run(sc, fused, attn)
+            if streams_s != streams_p:
+                raise SystemExit(
+                    f"speculative streams diverged from plain anchor "
+                    f"decode (fused={fused}, attn={attn}) — the draft/"
+                    f"verify/rollback loop broke bit-identity")
+            toks = sum(len(s) for s in streams_s[WARMUP:]) \
+                - (n_requests - WARMUP)
+            rate = st["spec_acceptance_rate"]
+            acc_pt = st["spec_accepted"] / max(st["spec_ticks"], 1)
+            path = "fused" if fused else "densify"
+            print(f"spec,{path},{attn},{draft_fmt},{k},{ticks_p},{ticks_s},"
+                  f"{st['spec_ticks']},"
+                  f"{-1.0 if rate is None else rate:.2f},{acc_pt:.2f},"
+                  f"{toks / max(ticks_p, 1):.2f},{toks / max(ticks_s, 1):.2f},"
+                  f"{dt_p:.2f},{dt_s:.2f}")
+            wins.append((ticks_p, ticks_s))
+    print(f"# speculative vs plain: token streams identical across all "
+          f"configs = True; decode ticks "
+          f"{sum(p for p, _ in wins)} -> {sum(s for _, s in wins)} "
+          f"({sum(p for p, _ in wins) / max(sum(s for _, s in wins), 1):.2f}x"
+          f" cut at draft={draft_fmt}, k={k})")
+    if not all(s < p for p, s in wins):
+        raise SystemExit("speculation won no decode ticks — drafting is "
+                         "not paying for itself on this workload")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -300,6 +385,15 @@ def main():
                          "ladder degradation demo")
     ap.add_argument("--fault-rates", default="0,0.1,0.25",
                     help="comma-separated per-tick fault rates for --chaos")
+    ap.add_argument("--speculative", action="store_true",
+                    help="run the self-speculative sweep instead of the "
+                         "perf matrix: plain vs draft-and-verify decode "
+                         "with a hard stream-identity gate, an acceptance-"
+                         "rate column, and a decode-tick-win gate")
+    ap.add_argument("--draft-fmt", default="mxint4",
+                    help="draft rung for --speculative")
+    ap.add_argument("--k", type=int, default=4,
+                    help="draft depth for --speculative")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -314,6 +408,16 @@ def main():
                     max_len=args.max_len, n_requests=args.requests,
                     max_new=args.max_new, vocab=cfg.vocab,
                     rates=[float(x) for x in args.fault_rates.split(",")])
+        return
+
+    if args.speculative:
+        bench_speculative(api, anchor, params, slots=args.slots,
+                          max_len=args.max_len, n_requests=args.requests,
+                          max_new=args.max_new, vocab=cfg.vocab,
+                          draft_fmt=args.draft_fmt, k=args.k,
+                          page_size=args.page_size,
+                          long_every=args.long_every,
+                          long_len=args.long_len)
         return
 
     # default chunk: one KV page (floored at the minimum prefill bucket) so

@@ -29,6 +29,15 @@ at most one chunk of prefill per tick — so running slots' inter-token
 latency stays bounded while a long prompt admits. Token streams are
 bit-identical either way.
 
+With --speculative, the demo adds self-speculative decoding
+(docs/serving_internals.md §9): each decode tick drafts k=4 tokens with
+the mxint4 rung of the SAME checkpoint (no second model — Slice-and-Scale
+already keeps the cheap rung resident) and verifies all of them in one
+multi-query step at the anchor rung, rewinding whatever the anchor
+disagrees with (cursor + page rollback). The demo runs the same burst
+plain and speculative and prints the acceptance rate, the decode-tick
+cut, and the fact that matters: the token streams are bit-identical.
+
 The final section demonstrates the failure model (docs/serving_internals.md
 §7): a deterministic FaultInjector makes the lowest rung produce NaN
 logits at runtime, and the engine's logit guard escalates the live batch
@@ -68,6 +77,10 @@ def main():
                     help="chunked-tick scheduler: 'mixed' (default with "
                          "--prefill-chunk) coalesces the chunk into the "
                          "decode batch — one executable per tick")
+    ap.add_argument("--speculative", action="store_true",
+                    help="demo self-speculative decoding: draft k=4 "
+                         "tokens/tick at mxint4, verify at the anchor, "
+                         "compare streams + ticks against plain decode")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -118,6 +131,41 @@ def main():
             print(f"  req {r.rid}: plen={r.prompt.size} ttft={r.ttft_s:.3f}s"
                   f" n_out={len(r.out_tokens)}")
         print()
+    if args.speculative:
+        from repro.serve.policy import SpecConfig
+        print("SPECULATIVE DECODE: draft k=4 at mxint4, verify at the "
+              "anchor in one multi-query step, rewind what it rejects "
+              "(docs/serving_internals.md §9)")
+        #   +4 draft-ahead tokens per slot past max_new — the verify
+        #   frontier runs k positions past the committed length
+        spec_pages = 4 * -(-(8 + 10 + 4) // 8) + 1
+        runs = {}
+        for label, sc in (("plain", None),
+                          ("spec", SpecConfig(draft_fmt="mxint4", k=4))):
+            e = ElasticEngine(api, anchor, batch_slots=4, max_len=64,
+                              param_template=params, kv_layout="paged",
+                              kv_page_size=8, kv_num_pages=spec_pages,
+                              attn_impl=args.attn_impl, speculative=sc)
+            rs = [Request(rid=400 + i,
+                          prompt=np.random.default_rng(5)
+                          .integers(0, cfg.vocab, (8, 8))[i % 2]
+                          .astype(np.int32), max_new=10)
+                  for i in range(6)]
+            e.generate(rs, greedy=True, fmt_override="mxint8")
+            runs[label] = (e, [list(r.out_tokens) for r in rs])
+        (ep, sp), (es, ss) = runs["plain"], runs["spec"]
+        ssst = es.stats
+        print(f"  streams bit-identical to plain anchor decode: {sp == ss}")
+        print(f"  decode ticks {ep.stats['ticks']} -> {ssst['ticks']} "
+              f"({ssst['spec_ticks']} spec ticks, acceptance rate "
+              f"{ssst['spec_acceptance_rate']:.2f}, "
+              f"{ssst['spec_accepted']} drafts accepted / "
+              f"{ssst['spec_rejected']} rewound)")
+        print(f"  pages {ssst['kv_pages_alloc']} alloc / "
+              f"{ssst['kv_pages_freed']} freed — rollback returns "
+              "draft-ahead pages exactly")
+        print()
+
     print("LOW LOAD: 3 requests")
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8)
                     .astype(np.int32), max_new=6) for i in range(3)]

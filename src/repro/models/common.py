@@ -289,6 +289,36 @@ def make_prefill_chunk_slot(prefill_chunk):
     return prefill_chunk_slot
 
 
+def spec_accept_counts(drafts, anchor_toks, budgets):
+    """Per-row commit counts for a speculative verify tick (host side).
+
+    ``drafts`` (B, k): the draft rung's greedy tokens for the burst.
+    ``anchor_toks`` (B, k+1): argmax of ``ModelApi.verify_step`` logits —
+    lane ``i`` is the verify format's own next token after consuming input
+    token ``i`` (lane 0 after the committed last token, lane ``i>0`` after
+    draft ``i-1``). A row accepts the longest prefix where
+    ``drafts[:, i] == anchor_toks[:, i]`` — every accepted draft is, by
+    construction, exactly the token plain verify-format decode would have
+    emitted — then commits those ``m`` tokens plus the verify step's bonus
+    token at lane ``m``: ``m + 1`` tokens total. The count is clamped to
+    the row's remaining ``budgets`` entry (max_new / cache-capacity
+    headroom), which is what keeps a speculative stream bit-identical to
+    plain decode even at the retire boundary. Returns (B,) int64 commit
+    counts (0 where ``budgets`` is 0; masked rows should pass budget 0).
+    """
+    import numpy as np
+    drafts = np.asarray(drafts)
+    anchor_toks = np.asarray(anchor_toks)
+    b, k = drafts.shape
+    if anchor_toks.shape != (b, k + 1):
+        raise ValueError(
+            f"anchor_toks {anchor_toks.shape} vs drafts {drafts.shape}")
+    hit = drafts == anchor_toks[:, :k]                     # (B, k)
+    # longest all-True prefix per row: index of first miss (k if none)
+    m = np.where(hit.all(axis=1), k, hit.argmin(axis=1))
+    return np.minimum(m + 1, np.asarray(budgets))
+
+
 # =============================================================================
 # Param init helpers
 # =============================================================================

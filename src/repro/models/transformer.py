@@ -487,6 +487,13 @@ class ModelApi:
     #                                decode rows at q_len 1, the mid-prefill
     #                                row at its chunk width, each at its own
     #                                cache_len cursor (attention-only)
+    verify_step: Callable = None   # mixed_step's speculative sibling: same
+    #                                (params, batch{tokens (B,C), q_len (B,)},
+    #                                cache, cache_len) contract but logits at
+    #                                ALL C positions -> (logits (B,C,V),
+    #                                cache): the single-executable anchor-side
+    #                                check of a k-token draft burst
+    #                                (docs/serving_internals.md §9)
     with_qmm: Callable = None      # (qmm) -> ModelApi whose serving entry
     #                                points route packed weight leaves
     #                                through the fused dequant-GEMM hook
@@ -761,17 +768,57 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
             logits = shard_act(logits, ("batch", "vocab"))
             return logits, new_cache
 
-        return prefill, serve_step, prefill_chunk, mixed_step
+        def verify_step(params, batch, cache, cache_len):
+            """One speculative-verify tick: logits at EVERY query position.
 
-    prefill, serve_step, prefill_chunk, mixed_step = _serving_fns(None)
+            Same contract as ``mixed_step`` — ``batch["tokens"]`` (B, C)
+            left-aligned new tokens, ``batch["q_len"]`` (B,) how many are
+            real, row ``b``'s token ``i`` at logical position
+            ``cache_len[b] + i`` — but the head projects ALL C positions,
+            returning logits (B, C, V) so the engine can compare every
+            draft token against this format's own greedy choice in one
+            executable. K/V for all C tokens land at the per-row cursor
+            BEFORE attention reads them (the standard mixed
+            write-then-attend order), so a verify pass overwrites whatever
+            a draft pass wrote at those positions: each verify attempt is
+            a pure function of the committed cache, which is what makes
+            guard escalate-and-replay safe under speculation
+            (docs/serving_internals.md §9). Pad lanes past a row's q_len
+            return meaningless logits; callers must only read live lanes.
+            """
+            if cfg.vision_tokens > 0:
+                raise ValueError(
+                    "verify_step does not support prepended vision embeds; "
+                    "disable speculative decoding for VLM configs")
+            ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
+            tokens = batch["tokens"]
+            q_len = batch["q_len"].astype(jnp.int32)
+            b, c = tokens.shape
+            x = _embed(params, cfg, tokens)
+            positions = cache_len[:, None] + \
+                jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+            hidden, new_cache, _ = forward_hidden(
+                ctx, params, cfg, x, positions, cache=cache,
+                cache_len=cache_len, prefill=False, q_len=q_len,
+                attn_impl=attn_impl)
+            d = hidden.shape[-1]
+            logits = _head_logits(ctx, params, cfg, hidden.reshape(b * c, d))
+            logits = logits.reshape(b, c, -1)
+            logits = shard_act(logits, ("batch", None, "vocab"))
+            return logits, new_cache
+
+        return prefill, serve_step, prefill_chunk, mixed_step, verify_step
+
+    (prefill, serve_step, prefill_chunk, mixed_step,
+     verify_step) = _serving_fns(None)
 
     def with_serving(qmm=None, attn_impl="gather"):
-        p, s, pc, ms = _serving_fns(qmm, attn_impl)
+        p, s, pc, ms, vs = _serving_fns(qmm, attn_impl)
         return dataclasses.replace(
             api, prefill=p, serve_step=s, prefill_slot=make_prefill_slot(p),
             prefill_chunk=pc,
             prefill_chunk_slot=make_prefill_chunk_slot(pc),
-            mixed_step=ms,
+            mixed_step=ms, verify_step=vs,
             attn_impl=attn_impl,
             # with_qmm on the derived api keeps ITS attn_impl (chaining must
             # not silently reset the decode path to the base default)
@@ -793,6 +840,7 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         prefill_chunk=prefill_chunk,
         prefill_chunk_slot=make_prefill_chunk_slot(prefill_chunk),
         mixed_step=mixed_step,
+        verify_step=verify_step,
         with_qmm=with_qmm,
         with_serving=with_serving,
     )

@@ -91,6 +91,7 @@ from repro.core.anchor import AnchorModel, convert, materialize
 from repro.core.formats import get_format
 from repro.core.mx import MXTensor
 from repro.kernels.paged_attention import pages_read, pages_read_mq
+from repro.models.common import spec_accept_counts
 from repro.models.transformer import ModelApi
 from repro.runtime.fault import InjectedFault
 from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
@@ -99,8 +100,9 @@ from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
                                        make_packed_prefill_chunk,
                                        make_packed_prefill_slot,
                                        make_packed_serve_step,
+                                       make_packed_verify_step,
                                        weight_stream_bytes)
-from repro.serve.policy import FormatPolicy
+from repro.serve.policy import FormatPolicy, SpecConfig
 
 DENSE_BF16 = "bf16"   # pseudo-format: dense anchor-precision weights
 
@@ -235,6 +237,24 @@ class ElasticEngine:
     multiple of ``kv_page_size`` so chunk boundaries fall on pages and each
     chunk's pages are allocated at that chunk, not all upfront.
 
+    ``speculative`` (a ``serve.policy.SpecConfig``) turns a pure-decode
+    tick into a self-speculative one: k greedy draft steps under the
+    ``draft_fmt`` packed contract (same slots, same paged pools — drafts
+    write through the normal decode-append path against a LOCAL cursor),
+    then ONE batched verify step at the pinned format over the k+1
+    positions per slot via the multi-query mixed-attention machinery
+    (``ModelApi.verify_step``). Each slot accepts its longest
+    greedy-matching draft prefix plus the verify step's bonus token;
+    rejected tokens roll back by rewinding that slot's ``cache_len`` (no
+    copies) and returning pages past the new frontier to the free list.
+    Because only verify-format argmaxes are ever committed, greedy token
+    streams are **bit-identical to plain pinned-format decode at any
+    acceptance rate** — speculation changes speed, never tokens
+    (docs/serving_internals.md §9 "Speculative decoding"; the guard /
+    quarantine interplay — a quarantined draft rung silently reverts to
+    plain decode — is specified there too). Greedy-only: ``generate``
+    rejects sampled decoding when speculation is on.
+
     ``scheduler`` selects how chunked ticks execute. ``"mixed"`` (the
     default whenever ``prefill_chunk`` is set) coalesces the prefill chunk
     INTO the decode batch: one ``mixed_step`` executable per tick, where
@@ -266,7 +286,8 @@ class ElasticEngine:
                  scheduler: Optional[str] = None,
                  logit_guard: bool = True,
                  max_step_retries: int = 2,
-                 fault_injector=None):
+                 fault_injector=None,
+                 speculative: Optional[SpecConfig] = None):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
@@ -369,6 +390,32 @@ class ElasticEngine:
                     f"model family {api.cfg.family!r} has no mixed_step "
                     "entry point; use scheduler='sequential'")
         self.scheduler = scheduler
+        # ---- self-speculative decoding (docs/serving_internals.md §9) ----
+        if speculative is not None:
+            if api.verify_step is None:
+                raise ValueError(
+                    f"model family {api.cfg.family!r} has no verify_step "
+                    "entry point; speculative decoding needs the "
+                    "multi-query mixed-attention machinery "
+                    "(pure-attention stacks only)")
+            if not pure_attn or api.cfg.vision_tokens > 0:
+                raise ValueError(
+                    "speculative decoding requires a pure-attention text "
+                    f"stack; family {api.cfg.family!r} cannot rewind "
+                    "recurrent state (or prepends vision embeds)")
+            if speculative.k < 1:
+                raise ValueError(
+                    f"SpecConfig.k ({speculative.k}) must be >= 1")
+            if speculative.draft_fmt == DENSE_BF16:
+                raise ValueError(
+                    "draft_fmt='bf16' drafts at anchor precision or above — "
+                    "drafting must be cheaper than verifying")
+        self.speculative = speculative
+        self._spec_ticks = 0        # decode ticks that ran draft+verify
+        self._spec_accepted = 0     # draft tokens committed to streams
+        self._spec_rejected = 0     # draft tokens rolled back
+        self._spec_aborts = 0       # spec attempts abandoned mid-tick
+        #                             (draft fault / page starvation)
         # ---- fault isolation (docs/serving_internals.md §7) --------------
         # logit_guard: host-side NaN/Inf check on every tick's consumed
         # logit rows; detection escalates the batch format one ladder rung
@@ -456,6 +503,17 @@ class ElasticEngine:
             make_packed_mixed_step(api, self._block_size, fused=self.fused,
                                    attn_impl=self.attn_impl))) \
             if api.mixed_step is not None else None
+        # Speculative verify entry points (lazy jit — compile only when a
+        # spec tick actually runs). Logits come back at ALL k+1 positions
+        # (B, C, V), so the guard's finite check reduces the lane axis too.
+        self._dense_verify = jax.jit(self._counting(step_api.verify_step)) \
+            if step_api.verify_step is not None else None
+        self._packed_verify = jax.jit(self._counting(
+            make_packed_verify_step(api, self._block_size, fused=self.fused,
+                                    attn_impl=self.attn_impl))) \
+            if api.verify_step is not None else None
+        self._finite_rows_mq = jax.jit(
+            lambda lg: jnp.isfinite(lg).all(axis=(-2, -1)))
 
     def _counting(self, fn):
         """Wrap a to-be-jitted fn so traces (= compiles) are counted."""
@@ -693,8 +751,8 @@ class ElasticEngine:
             self._ticks_replayed += 1
 
     def _guarded_decode(self, attempt, pinned: str, consumed: List[int],
-                        tick: int):
-        """Run one decode/mixed executable under the runtime guardrail.
+                        tick: int, finite_fn=None):
+        """Run one decode/mixed/verify executable under the guardrail.
 
         Replay semantics (docs/serving_internals.md §7): every attempt is
         a pure function of the PRE-tick ``(cache, cache_len, tokens)`` —
@@ -702,11 +760,15 @@ class ElasticEngine:
         only after this returns, so per-slot RNG chains stay "seed + one
         advance per decode tick" and surviving streams are bit-identical
         across replays. KV writes are idempotent (positions >= cache_len
-        are simply recomputed). An ``InjectedFault`` from the step retries
+        are simply recomputed — a speculative VERIFY attempt likewise
+        overwrites every draft-written position before attending, §9, so
+        it replays safely too). An ``InjectedFault`` from the step retries
         at the SAME format (transient-crash model, bounded by
         ``max_step_retries``); non-finite logits in any *consumed* row
         escalate the format one rung and replay; at the anchor the dead
-        rows are returned for per-row retirement.
+        rows are returned for per-row retirement. ``finite_fn`` overrides
+        the per-row finiteness reduction (the verify step's (B, C, V)
+        logits reduce the lane axis too).
         Returns ``(logits, cache, pinned, dead_rows, execs)``.
         """
         retries = 0
@@ -724,7 +786,7 @@ class ElasticEngine:
                 continue
             if not self.logit_guard or not consumed:
                 return logits, cache2, pinned, [], execs
-            finite = np.asarray(self._finite_rows(logits))
+            finite = np.asarray((finite_fn or self._finite_rows)(logits))
             dead = [i for i in consumed if not finite[i]]
             if not dead:
                 return logits, cache2, pinned, [], execs
@@ -764,6 +826,11 @@ class ElasticEngine:
         remaining streams. ``_state`` is the internal resume path; callers
         never pass it.
         """
+        if self.speculative is not None and not greedy:
+            raise ValueError(
+                "speculative decoding is greedy-only: the acceptance rule "
+                "compares greedy argmaxes token-for-token; build the "
+                "engine without speculative= for sampled decoding")
         b = self.slots
         paged = self.kv_layout == "paged"
         chunk = self.prefill_chunk         # None => monolithic admission
@@ -1225,6 +1292,237 @@ class ElasticEngine:
             if chunk_tok is not None and chunk_tok[3] \
                     and filling is not None:
                 consumed.append(fill_slot)
+
+            # ---- speculative decode tick (docs/serving_internals.md §9):
+            # k draft steps at the cheap rung against a LOCAL cursor, one
+            # batched pinned-format verify over the k+1 positions, commit
+            # the longest greedy-matching prefix + bonus token per slot,
+            # rewind the rest. Only on pure-decode ticks (no staged chunk),
+            # and only while the policy says drafting pays for itself.
+            sc = self.speculative
+            spec_now = sc is not None and chunk_tok is None and bool(consumed)
+            if spec_now:
+                tot = self._spec_accepted + self._spec_rejected
+                rate = (self._spec_accepted / tot
+                        if self._spec_ticks >= sc.window and tot else None)
+                spec_now = self.policy.allow_speculation(
+                    sc.draft_fmt, pinned, rate, sc.min_acceptance)
+            if spec_now:
+                # Burst length this tick: never write past the cache (the
+                # verify write frontier is slot_len + k_eff <= max_len - 1)
+                # and never draft deeper than the hungriest slot can still
+                # commit (budget - 1 drafts + the bonus token).
+                buds = {i: min(active[i].max_new
+                               - len(active[i].out_tokens),
+                               self.prompt_capacity - slot_len[i])
+                        for i in consumed}
+                k_eff = min(sc.k,
+                            self.max_len - 1
+                            - max(slot_len[i] for i in consumed),
+                            max(buds.values()) - 1)
+                spec_now = k_eff >= 1
+            if spec_now and paged:
+                # Draft-ahead pages covering positions slot_len..slot_len +
+                # k_eff per slot, ON TOP of the plain-decode page the loop
+                # above already mapped. Speculation never outranks anything:
+                # starvation hands the pages back and runs a plain tick.
+                spec_extra = []
+                try:
+                    for i in consumed:
+                        base_pg = slot_len[i] // ps
+                        for pg in range(base_pg + 1,
+                                        (slot_len[i] + k_eff) // ps + 1):
+                            if bt[i, pg] == 0:
+                                bt[i, pg] = self._alloc_pages(
+                                    free_pages, 1,
+                                    f"spec draft-ahead for "
+                                    f"rid={active[i].rid}")[0]
+                                spec_extra.append((i, pg))
+                except RuntimeError:
+                    for i, pg in spec_extra:
+                        free_pages.append(int(bt[i, pg]))
+                        bt[i, pg] = 0
+                        self._kv_pages_freed += 1
+                    spec_extra = []
+                    self._spec_aborts += 1
+                    spec_now = False
+                if spec_extra:
+                    cache["block_table"] = jnp.asarray(bt)
+            if spec_now:
+                # ---- draft phase: k_eff greedy serve_steps at draft_fmt.
+                # The committed (cache_len, tokens) never advance — local
+                # copies do — so abandoning the burst at any point needs no
+                # undo: draft KV sits past every committed cursor, masked,
+                # and the next write there overwrites it.
+                adv = jnp.asarray(mask)
+                loc_len, loc_tok = cache_len, tokens
+                drafts = np.zeros((b, k_eff), np.int64)
+                draft_execs = 0
+                draft_ok = True
+                for j in range(k_eff):
+                    try:
+                        if fi is not None:
+                            fi.maybe_raise_step(tick)
+                        fn = self._packed_step \
+                            if self._serves_packed(sc.draft_fmt) \
+                            else self._dense_step
+                        lg, cache = fn(self.weights_for(sc.draft_fmt),
+                                       {"tokens": loc_tok}, cache, loc_len)
+                        if fi is not None:
+                            lg = fi.maybe_poison_logits(tick, sc.draft_fmt,
+                                                        lg)
+                    except InjectedFault:
+                        # Transient crash mid-burst: drop the burst, decode
+                        # plain this tick (the injector fires once per tick,
+                        # so the plain attempt below runs clean).
+                        self._faults_detected += 1
+                        draft_ok = False
+                        break
+                    draft_execs += 1
+                    if self.logit_guard:
+                        finite = np.asarray(self._finite_rows(lg))
+                        if not all(finite[i] for i in consumed):
+                            # The draft rung itself is sick: quarantine it
+                            # (allow_speculation then vetoes the rest of
+                            # the wave — plain anchor-side decode from here
+                            # on) and abandon the burst. Nothing was
+                            # committed, so there is nothing to double-emit.
+                            self._faults_detected += 1
+                            self.policy.quarantine(sc.draft_fmt)
+                            draft_ok = False
+                            break
+                    d = jnp.argmax(lg, -1)
+                    drafts[:, j] = np.asarray(d)
+                    loc_tok = d[:, None].astype(jnp.int32)
+                    loc_len = loc_len + adv
+                if not draft_ok:
+                    self._spec_aborts += 1
+                    spec_now = False
+            if spec_now:
+                # ---- verify phase: ONE pinned-format executable scores
+                # [last committed token, d_1..d_k] per slot (q_len = k+1;
+                # masked rows ride at q_len 1 exactly as in a mixed tick).
+                # It writes pinned-format K/V over every draft-written
+                # position BEFORE attending, so each attempt is a pure
+                # function of committed state — _guarded_decode's
+                # escalate-and-replay applies unchanged, and the drafts are
+                # never re-run on a replay.
+                cdim = k_eff + 1
+                tok2d = jnp.zeros((b, cdim), jnp.int32) \
+                    .at[:, 0].set(tokens[:, 0]) \
+                    .at[:, 1:].set(jnp.asarray(drafts, jnp.int32))
+                q_np = np.ones(b, np.int32)
+                q_np[mask.astype(bool)] = cdim
+                batch_v = {"tokens": tok2d, "q_len": jnp.asarray(q_np)}
+
+                def vattempt(fmt, bv=batch_v):
+                    if fi is not None:
+                        fi.maybe_raise_step(tick)
+                    fn = self._packed_verify if self._serves_packed(fmt) \
+                        else self._dense_verify
+                    lg, c2 = fn(self.weights_for(fmt), bv, cache, cache_len)
+                    if fi is not None:
+                        lg = fi.maybe_poison_logits(tick, fmt, lg)
+                    return lg, c2
+
+                logits3, cache, new_pinned, dead, vexecs = \
+                    self._guarded_decode(vattempt, pinned, consumed, tick,
+                                         finite_fn=self._finite_rows_mq)
+                if new_pinned != pinned:
+                    pinned = repin(new_pinned)
+                tick_execs += draft_execs + vexecs
+                tick_rows += b * (draft_execs + vexecs)
+
+                # ---- accept/commit: every committed token is the VERIFY
+                # format's own argmax (accepted drafts equal it by
+                # definition), which is the whole bit-identity guarantee.
+                anchor_toks = np.asarray(jnp.argmax(logits3, -1))  # (b, C)
+                budgets = np.zeros(b, np.int64)
+                for i in consumed:
+                    if i not in dead:
+                        budgets[i] = buds[i]
+                commit = spec_accept_counts(drafts, anchor_toks, budgets)
+                cache_len = cache_len + jnp.asarray(commit, jnp.int32) \
+                    * jnp.asarray(mask)
+                nxt_np = np.array([anchor_toks[i, max(int(commit[i]) - 1, 0)]
+                                   for i in range(b)], np.int64)
+                tokens = jnp.asarray(nxt_np, jnp.int32)[:, None]
+                self._ticks += 1
+                self._spec_ticks += 1
+                for i in consumed:
+                    if i not in dead:
+                        acc = int(commit[i]) - 1
+                        self._spec_accepted += acc
+                        self._spec_rejected += k_eff - acc
+
+                # Attention-read accounting: k_eff single-query walks at a
+                # growing cursor plus vexecs multi-query walks per live
+                # slot (mirrors the plain tick's arithmetic below).
+                window = self.api.cfg.sliding_window
+                for i in range(b):
+                    if not (paged and self.attn_impl == "paged_kernel"):
+                        self._attn_tokens_read += \
+                            self._attn_read_span * (draft_execs + vexecs)
+                    elif active[i] is not None:
+                        for j in range(draft_execs):
+                            self._attn_tokens_read += pages_read(
+                                slot_len[i] + 1 + j, ps, window) * ps
+                        self._attn_tokens_read += vexecs * pages_read_mq(
+                            slot_len[i], cdim, ps, window) * ps
+                    elif filling is not None and i == fill_slot:
+                        self._attn_tokens_read += \
+                            (draft_execs + vexecs) * pages_read(
+                                fill_cursor + 1, ps, window) * ps
+                    else:
+                        self._attn_tokens_read += \
+                            (draft_execs + vexecs) * ps
+
+                # Dead rows (non-finite verify logits at the anchor rung):
+                # retire before the drain, exactly like a plain tick — no
+                # draft of theirs was committed (budget forced to 0).
+                for i in dead:
+                    r_dead = active[i]
+                    if r_dead is None:
+                        continue
+                    active[i] = None
+                    release_slot(i)
+                    self._finish(
+                        r_dead, RequestStatus.FAILED_NUMERIC,
+                        f"non-finite logits in this request's row at the "
+                        f"anchor rung ({pinned}), verify tick {tick}")
+
+                # ---- drain + rewind: commit[i] tokens enter the stream;
+                # pages past the new frontier go straight back to the free
+                # list (the KV "rollback" is just these two lines — no data
+                # moves, stale positions are masked by cache_len).
+                for i, r in enumerate(active):
+                    if r is None:
+                        continue
+                    n_c = int(commit[i])
+                    slot_len[i] += n_c
+                    r.out_tokens.extend(int(t)
+                                        for t in anchor_toks[i, :n_c])
+                    self._tokens_out += n_c
+                    if paged:
+                        self._rollback_slot_pages(free_pages, bt, i,
+                                                  slot_len[i])
+                    if len(r.out_tokens) >= r.max_new or \
+                            slot_len[i] >= self.prompt_capacity:
+                        self._finish(r, RequestStatus.COMPLETED)
+                        active[i] = None
+                        release_slot(i)
+                if paged:
+                    cache["block_table"] = jnp.asarray(bt)
+                self._record_tick(tick_pf_tokens, tick_pf_chunks, 1,
+                                  time.perf_counter() - t_tick,
+                                  execs=tick_execs, rows=tick_rows,
+                                  decode_rows=int(mask.sum()),
+                                  draft_execs=draft_execs,
+                                  verify_execs=vexecs)
+                if all(a is None for a in active) and filling is None:
+                    pinned = None
+                continue
+
             if chunk_tok is not None:
                 # ---- mixed tick: the staged chunk rides the decode batch as
                 # ONE executable. Decode rows keep their 1-token budget in
@@ -1372,7 +1670,8 @@ class ElasticEngine:
 
     def _record_tick(self, prefill_tokens: int, prefill_chunks: int,
                      decode: int, wall_s: float, *, execs: int = 0,
-                     rows: int = 0, decode_rows: int = 0) -> None:
+                     rows: int = 0, decode_rows: int = 0,
+                     draft_execs: int = 0, verify_execs: int = 0) -> None:
         """Append one scheduler-tick trace entry (reset per ``generate``).
 
         ``prefill_tokens`` counts padded prompt tokens prefilled this tick
@@ -1385,13 +1684,19 @@ class ElasticEngine:
         those executables processed and ``decode_rows`` the subset that were
         live decoding slots; ``benchmarks/serve_engine_bench.py`` derives
         its decode-occupancy and decode-stall columns from these plus
-        ``wall_s``.
+        ``wall_s``. ``draft_execs``/``verify_execs`` split ``execs`` on a
+        speculative tick (both 0 otherwise), so the execs-per-tick
+        invariants stay assertable under speculation: a non-spec tick's
+        plain executables are exactly
+        ``execs - draft_execs - verify_execs``.
         """
         self.tick_trace.append({"prefill_tokens": prefill_tokens,
                                 "prefill_chunks": prefill_chunks,
                                 "decode": decode, "wall_s": wall_s,
                                 "execs": execs, "rows": rows,
-                                "decode_rows": decode_rows})
+                                "decode_rows": decode_rows,
+                                "draft_execs": draft_execs,
+                                "verify_execs": verify_execs})
 
     def _free_slot_pages(self, free_pages: List[int], bt: np.ndarray,
                          slot: int) -> None:
@@ -1402,6 +1707,25 @@ class ElasticEngine:
         free_pages.extend(int(p) for p in used)
         self._kv_pages_freed += used.size
         bt[slot, :] = 0
+
+    def _rollback_slot_pages(self, free_pages: List[int], bt: np.ndarray,
+                             slot: int, frontier: int) -> None:
+        """Speculative rewind, page half: free this slot's pages strictly
+        past the one holding position ``frontier - 1`` (the last committed
+        token after acceptance). Earlier pages — and every other slot's
+        block-table row — are untouched; the freed pages' stale draft KV
+        is unreachable (masked by ``cache_len`` until recycled, then
+        overwritten by the next occupant's writes before any read). This
+        restores the plain-decode steady-state invariant exactly: a slot
+        holds ``ceil(slot_len / page)`` pages between ticks, so
+        ``alloc == freed`` at retire regardless of accept/reject history.
+        """
+        keep = -(-frontier // self.kv_page_size)
+        tail = bt[slot, keep:]
+        drop = tail[tail != 0]
+        free_pages.extend(int(p) for p in drop)
+        self._kv_pages_freed += drop.size
+        bt[slot, keep:] = 0
 
     def _sample(self, logits, greedy: bool, slot: Optional[int] = None):
         """Greedy argmax, or a temperature/top-p draw from per-slot streams.
@@ -1455,6 +1779,10 @@ class ElasticEngine:
             "bucket": self._bucket,
             "temperature": self.temperature,
             "top_p": self.top_p,
+            # string-encoded so the JSON manifest round-trips exactly
+            "speculative": (f"{self.speculative.draft_fmt}:k"
+                            f"{self.speculative.k}"
+                            if self.speculative is not None else None),
         }
 
     def _save_snapshot(self, root: str, requests: List[Request], st: dict,
@@ -1517,6 +1845,10 @@ class ElasticEngine:
                 "ticks_replayed": self._ticks_replayed,
                 "admission_requeues": self._admission_requeues,
                 "attn_tokens_read": self._attn_tokens_read,
+                "spec_ticks": self._spec_ticks,
+                "spec_accepted": self._spec_accepted,
+                "spec_rejected": self._spec_rejected,
+                "spec_aborts": self._spec_aborts,
                 "status_counts": self._status_counts,
                 "failures": self._failures,
                 "escalation_events": self._escalation_events,
@@ -1586,6 +1918,10 @@ class ElasticEngine:
         self._ticks_replayed = c["ticks_replayed"]
         self._admission_requeues = c["admission_requeues"]
         self._attn_tokens_read = c["attn_tokens_read"]
+        self._spec_ticks = c.get("spec_ticks", 0)
+        self._spec_accepted = c.get("spec_accepted", 0)
+        self._spec_rejected = c.get("spec_rejected", 0)
+        self._spec_aborts = c.get("spec_aborts", 0)
         self._status_counts = dict(c["status_counts"])
         self._failures = list(c["failures"])
         self._escalation_events = list(c["escalation_events"])
@@ -1648,6 +1984,16 @@ class ElasticEngine:
             "kv_pages_alloc": self._kv_pages_alloc,
             "kv_pages_freed": self._kv_pages_freed,
             "kv_pages_hwm": self._kv_pages_hwm,
+            "speculative": (dataclasses.asdict(self.speculative)
+                            if self.speculative is not None else None),
+            "spec_ticks": self._spec_ticks,
+            "spec_accepted": self._spec_accepted,
+            "spec_rejected": self._spec_rejected,
+            "spec_aborts": self._spec_aborts,
+            "spec_acceptance_rate": (
+                self._spec_accepted
+                / (self._spec_accepted + self._spec_rejected)
+                if self._spec_accepted + self._spec_rejected else None),
             "logit_guard": self.logit_guard,
             "faults_detected": self._faults_detected,
             "fmt_escalations": self._fmt_escalations,

@@ -328,6 +328,27 @@ def make_packed_mixed_step(api, block_size: int = 32, *,
     return make_packed_fn(api, api.mixed_step, block_size)
 
 
+def make_packed_verify_step(api, block_size: int = 32, *,
+                            fused: bool = False, attn_impl: str = "gather"):
+    """Speculative verify tick over packed params.
+
+    ``(packed_params, batch{tokens (B,C), q_len (B,)}, cache, cache_len)
+    -> (logits (B,C,V), cache)`` — ``ModelApi.verify_step``, the
+    all-positions sibling of ``mixed_step``: one executable scores a
+    k-token draft burst per decode row under the verify format so the
+    engine can accept the longest greedy-matching prefix and rewind the
+    rest (docs/serving_internals.md §9 "Speculative decoding"). Weight and
+    attention contracts mirror ``make_packed_mixed_step`` — fused Pallas
+    dequant-GEMM vs XLA densify-inside-jit, and the ragged multi-query
+    paged read path (``"paged_kernel"`` | ``"gather"``). Any
+    (fused, attn_impl) pairing yields identical token streams.
+    """
+    if fused:
+        return _fused_api(api, block_size, attn_impl).verify_step
+    api = _attn_api(api, attn_impl)
+    return make_packed_fn(api, api.verify_step, block_size)
+
+
 def make_packed_prefill_slot(api, block_size: int = 32, *,
                              fused: bool = False):
     """Single-slot prefill-insert over packed params (see ModelApi).

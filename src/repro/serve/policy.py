@@ -28,6 +28,28 @@ import dataclasses
 from typing import List, Optional, Set, Tuple
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Self-speculative decoding knobs (docs/serving_internals.md §9).
+
+    ``draft_fmt`` names the cheap rung that drafts ``k`` tokens per decode
+    tick; the batch-pinned format verifies them in one multi-query step.
+    Both come from the same anchor checkpoint via Slice-and-Scale, so the
+    draft model is free — no separate weights, no separate KV cache.
+    Speculation never changes tokens (the engine commits only the verify
+    format's own greedy choices); the policy's ``allow_speculation`` turns
+    it off when it stops paying for itself: ``min_acceptance`` is the
+    measured per-wave draft acceptance rate below which drafting costs
+    more than it saves, judged only after ``window`` speculative ticks of
+    evidence.
+    """
+
+    draft_fmt: str = "mxint4"
+    k: int = 4
+    min_acceptance: float = 0.0    # 0 = never disable on acceptance rate
+    window: int = 16               # spec ticks before the rate is trusted
+
+
 @dataclasses.dataclass
 class FormatPolicy:
     anchor: str = "mxint8"
@@ -69,6 +91,28 @@ class FormatPolicy:
         checkpoint's native precision and the ladder's terminal rung."""
         if fmt != self.anchor:
             self.quarantined.add(fmt)
+
+    def allow_speculation(self, draft_fmt: str, pinned_fmt: str,
+                          acceptance_rate: Optional[float] = None,
+                          min_acceptance: float = 0.0) -> bool:
+        """Should the engine draft at ``draft_fmt`` this tick?
+
+        Three vetoes, mirroring the degradation ladder's logic: a
+        quarantined draft rung would poison every draft (the engine falls
+        back to plain pinned-format decode — the streams are identical
+        either way, only speed changes); a draft rung equal to the pinned
+        format has no cheaper model to offer; and a measured
+        ``acceptance_rate`` below ``min_acceptance`` means the k draft
+        steps cost more than the accepted tokens save (pass None while the
+        sample is too small to judge — see ``SpecConfig.window``).
+        """
+        if draft_fmt in self.quarantined:
+            return False
+        if draft_fmt == pinned_fmt:
+            return False
+        if acceptance_rate is not None and acceptance_rate < min_acceptance:
+            return False
+        return True
 
     def pick(self, queue_depth: int, active: int = 0,
              prefill_tokens: int = 0) -> str:

@@ -429,3 +429,79 @@ def test_mixed_scheduler_survives_row_poison(setup):
             assert r.out_tokens == clean[r.rid]
     assert any(r.status is RequestStatus.FAILED_NUMERIC
                for r in streams[True])
+
+
+# ---- speculative decoding x fault machinery (docs §9 x §7) ----------------
+def test_spec_verify_poison_escalates_without_double_commit(setup):
+    """A batch-wide NaN during a speculative VERIFY tick must ride the
+    standard escalate-and-replay path WITHOUT re-running (or re-committing)
+    the drafts: verify overwrites draft-written KV before attending, so a
+    replay at the next rung is a pure function of pre-tick committed state.
+
+    Identity needs the rung-per-token schedule aligned across runs, so both
+    use chunked admission (prompt = one chunk): tick 0/1 admit, tick 2 is
+    the first pure-decode tick for both — poisoned at mxint6 — so BOTH runs
+    emit the same tokens at mxint6 up to that point and escalate to mxint8
+    for the rest, and the spec stream must match plain bit for bit."""
+    from repro.serve.policy import SpecConfig
+    cfg, api, params, anchor = setup
+    streams = {}
+    engines = {}
+    for spec in (None, SpecConfig(draft_fmt="mxint4", k=4)):
+        fi = FaultInjector(poison_logits={t: None for t in range(2, 64)},
+                           poison_fmt="mxint6")
+        eng = _engine(api, anchor, params, max_len=48, prefill_chunk=PS,
+                      fault_injector=fi, speculative=spec)
+        reqs = _reqs(cfg, 2, max_new=8)
+        eng.generate(reqs, fmt_override="mxint6")
+        assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+        streams[spec is not None] = [r.out_tokens for r in reqs]
+        engines[spec is not None] = eng
+        _assert_no_leak(eng)
+    assert streams[True] == streams[False]
+    for eng in engines.values():
+        st = eng.stats
+        assert st["fmt_escalations"] == 1
+        ev = st["escalation_events"][0]
+        assert (ev["from"], ev["to"]) == ("mxint6", "mxint8")
+    # the escalated tick replayed ONLY the verify executable: its trace
+    # entry shows two verify attempts over a single k-deep draft burst
+    replayed = [t for t in engines[True].tick_trace
+                if t["verify_execs"] >= 2]
+    assert len(replayed) == 1
+    assert 1 <= replayed[0]["draft_execs"] <= 4
+    # no double commit anywhere: exact token counts on every stream
+    assert all(len(s) == 8 for s in streams[True])
+    assert engines[True].stats["spec_ticks"] >= 1
+
+
+def test_spec_draft_quarantine_falls_back_to_plain_decode(setup):
+    """A sick DRAFT rung mid-wave (NaN logits under the guard) quarantines
+    that rung and reverts to plain pinned-format decode for the rest of the
+    wave — nothing from the abandoned burst was committed, so the streams
+    stay bit-identical to a never-speculated run (pinned at the anchor, the
+    rung schedule is trivially aligned)."""
+    from repro.serve.policy import SpecConfig
+    cfg, api, params, anchor = setup
+    eng_p = _engine(api, anchor, params, max_len=48)
+    reqs_p = _reqs(cfg, 2, max_new=16)
+    eng_p.generate(reqs_p, fmt_override="mxint8")
+    fi = FaultInjector(poison_logits={2: None}, poison_fmt="mxint4")
+    eng = _engine(api, anchor, params, max_len=48, fault_injector=fi,
+                  speculative=SpecConfig(draft_fmt="mxint4", k=4))
+    reqs = _reqs(cfg, 2, max_new=16)
+    eng.generate(reqs, fmt_override="mxint8")
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in reqs_p]
+    st = eng.stats
+    assert "mxint4" in st["quarantined_formats"]
+    assert st["spec_aborts"] == 1
+    assert st["faults_detected"] >= 1
+    assert st["fmt_escalations"] == 0        # pinned rung never misbehaved
+    assert st["spec_ticks"] >= 1             # it DID speculate before t=2
+    # after the quarantine tick, every remaining tick is plain decode
+    aborted = max(i for i, t in enumerate(eng.tick_trace)
+                  if t["draft_execs"] or t["verify_execs"])
+    assert all(t["draft_execs"] == 0 and t["verify_execs"] == 0
+               for t in eng.tick_trace[aborted + 1:])
+    _assert_no_leak(eng)

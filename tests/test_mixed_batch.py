@@ -437,3 +437,27 @@ def test_mixed_step_survives_api_chaining(setup):
     full, _ = _streams(api, anchor, params, cfg, "mixed", n=3,
                        fused=True, attn_impl="paged_kernel", **kw)
     assert base == full
+
+
+def test_execs_per_tick_invariant_survives_speculation(setup):
+    """tick_trace splits ``draft_execs``/``verify_execs`` out of ``execs``
+    precisely so this file's one-executable-per-tick claim stays
+    assertable when speculation is on: a tick's PLAIN executables are
+    ``execs - draft_execs - verify_execs``, and under the mixed scheduler
+    that difference never exceeds one (a speculative tick replaces the
+    single decode executable with the draft burst + one verify)."""
+    from repro.serve.policy import SpecConfig
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params, prefill_chunk=CHUNK,
+                  scheduler="mixed", max_len=64,
+                  speculative=SpecConfig(draft_fmt="mxint4", k=4))
+    eng.generate(_reqs(cfg, 3, plens=(30, 8, 8), seed=2),
+                 fmt_override="mxint8")
+    assert any(t["draft_execs"] for t in eng.tick_trace), "never drafted"
+    for t in eng.tick_trace:
+        plain = t["execs"] - t["draft_execs"] - t["verify_execs"]
+        assert 0 <= plain <= 1, t
+        # spec only ever replaces the pure-decode executable: chunk ticks
+        # keep the coalesced single-exec shape with no draft burst
+        if t["prefill_chunks"]:
+            assert t["draft_execs"] == 0 and t["verify_execs"] == 0, t

@@ -1,0 +1,375 @@
+"""Acceptance-invariance suite for self-speculative elastic decoding.
+
+The contract under test (docs/serving_internals.md §9 "Speculative
+decoding"): with ``ElasticEngine(speculative=SpecConfig(...))``, k greedy
+draft steps run at the cheap rung and ONE batched verify step at the
+pinned format scores the k+1 positions per slot; only the verify format's
+own argmaxes are ever committed. Therefore, under greedy sampling:
+
+  - token streams are BIT-IDENTICAL to plain pinned-format decode for
+    every slot, at ANY acceptance rate — even an adversarially poisoned
+    draft rung (acceptance ~ 0) may only change speed, never tokens;
+  - the paged free list stays exact across any accept/reject pattern:
+    pages past a rewound ``cache_len`` are freed at the rollback,
+    ``kv_pages_alloc == kv_pages_freed`` once the wave drains, and a
+    neighbor's rollback never touches another slot's block-table row;
+  - ``tick_trace`` splits each speculative tick into draft vs verify
+    executables so the execs-per-tick invariants stay assertable.
+
+Fast pair runs tier-1; the full {fused, densify} x {gather, paged_kernel}
+x draft x k matrix is @pytest.mark.slow (CI runs it non-blocking).
+"""
+import numpy as np
+import jax
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_stub import hypothesis, st
+
+from repro.configs import get_reduced
+from repro.core import make_anchor
+from repro.core.qat import QATConfig
+from repro.models import get_model
+from repro.models.common import spec_accept_counts
+from repro.runtime.fault import FaultInjector
+from repro.serve.engine import ElasticEngine, Request
+from repro.serve.policy import FormatPolicy, SpecConfig
+
+QAT = QATConfig(formats=("mxint4", "mxint6", "mxint8"), anchor="mxint8",
+                block_size=32)
+PS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("smollm-135m")
+    api = get_model(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    anchor = make_anchor(params, QAT)
+    return cfg, api, params, anchor
+
+
+def _engine(api, anchor, params, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("kv_page_size", PS)
+    kw.setdefault("fused", False)
+    return ElasticEngine(api, anchor, param_template=params, **kw)
+
+
+def _reqs(cfg, n, max_new=6, plen=8, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=plen)
+                    .astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _streams(reqs):
+    return [list(r.out_tokens) for r in reqs]
+
+
+def _no_leak(eng):
+    st_ = eng.stats
+    assert st_["kv_pages_alloc"] == st_["kv_pages_freed"], \
+        (st_["kv_pages_alloc"], st_["kv_pages_freed"])
+
+
+def _run(setup, spec, *, n=3, max_new=6, fmt="mxint8", injector=None,
+         **kw):
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params, speculative=spec,
+                  fault_injector=injector, **kw)
+    reqs = _reqs(cfg, n, max_new=max_new)
+    eng.generate(reqs, greedy=True, fmt_override=fmt)
+    return eng, _streams(reqs)
+
+
+# ---------------------------------------------------------------------------
+# fast pair (tier-1): one densify/gather and one fused/paged_kernel config
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused,attn", [(False, "gather"),
+                                        (True, "paged_kernel")])
+def test_spec_stream_identity(setup, fused, attn):
+    _, plain = _run(setup, None, fused=fused, attn_impl=attn)
+    eng, spec = _run(setup, SpecConfig(draft_fmt="mxint4", k=4),
+                     fused=fused, attn_impl=attn)
+    assert spec == plain
+    st_ = eng.stats
+    assert st_["spec_ticks"] > 0
+    assert st_["spec_accepted"] >= 0 and st_["spec_rejected"] >= 0
+    assert st_["speculative"] == {"draft_fmt": "mxint4", "k": 4,
+                                  "min_acceptance": 0.0, "window": 16}
+    _no_leak(eng)
+
+
+def test_spec_fewer_decode_ticks_when_accepting(setup):
+    """Speculation's whole point: accepted drafts compress decode ticks.
+    The toy model decodes highly repetitive streams, so acceptance is
+    high and the spec engine must finish the same wave in strictly fewer
+    decode ticks (tokens per tick > 1)."""
+    eng_p, plain = _run(setup, None)
+    eng_s, spec = _run(setup, SpecConfig(draft_fmt="mxint4", k=4))
+    assert spec == plain
+    assert eng_s.stats["ticks"] < eng_p.stats["ticks"]
+    assert eng_s.stats["spec_accepted"] > 0
+
+
+def test_spec_poisoned_draft_stream_must_still_match(setup):
+    """Adversarial rung: every draft tick's mxint4 logits are NaN-poisoned
+    (guard off, so the garbage drafts flow into verify). argmax of an
+    all-NaN row is constant, acceptance collapses toward zero — and the
+    emitted streams STILL match plain anchor decode bit for bit, because
+    verify only ever commits its own argmaxes."""
+    fi = FaultInjector(poison_logits={t: None for t in range(256)},
+                       poison_fmt="mxint4")
+    _, plain = _run(setup, None, logit_guard=False)
+    eng, spec = _run(setup, SpecConfig(draft_fmt="mxint4", k=4),
+                     injector=fi, logit_guard=False)
+    assert spec == plain
+    st_ = eng.stats
+    assert st_["spec_ticks"] > 0
+    assert st_["spec_rejected"] > 0
+    rate = st_["spec_acceptance_rate"]
+    assert rate is not None and rate < 0.5
+    _no_leak(eng)
+
+
+def test_spec_identity_under_mixed_scheduler(setup):
+    """Speculation and the mixed chunked-admission scheduler compose:
+    chunk-carrying ticks run plain mixed steps, pure-decode ticks
+    speculate, and the streams still match plain chunked decode."""
+    kw = dict(prefill_chunk=8, scheduler="mixed", attn_impl="paged_kernel",
+              kv_num_pages=4 * 7 + 1)
+    _, plain = _run(setup, None, **kw)
+    eng, spec = _run(setup, SpecConfig(draft_fmt="mxint4", k=4), **kw)
+    assert spec == plain
+    assert eng.stats["spec_ticks"] > 0
+    # chunk ticks never speculate: a tick with prefill work has no drafts
+    for t in eng.tick_trace:
+        if t["prefill_chunks"]:
+            assert t["draft_execs"] == 0
+    _no_leak(eng)
+
+
+def test_spec_tick_trace_splits_draft_and_verify(setup):
+    eng, _ = _run(setup, SpecConfig(draft_fmt="mxint4", k=4))
+    spec_ticks = [t for t in eng.tick_trace if t["draft_execs"]]
+    assert len(spec_ticks) == eng.stats["spec_ticks"]
+    for t in spec_ticks:
+        assert 1 <= t["draft_execs"] <= 4
+        assert t["verify_execs"] >= 1
+        # a pure spec tick dispatches exactly draft + verify executables
+        if not t["prefill_chunks"]:
+            assert t["execs"] == t["draft_execs"] + t["verify_execs"]
+    # non-spec engines never report spec executables
+    eng_p, _ = _run(setup, None)
+    assert all(t["draft_execs"] == 0 and t["verify_execs"] == 0
+               for t in eng_p.tick_trace)
+
+
+def test_spec_policy_disables_on_low_acceptance(setup):
+    """spec on/off is a policy decision fed by the measured acceptance
+    rate: with the draft rung poisoned into garbage (guard off) and a
+    high min_acceptance, the engine stops drafting after the measurement
+    window — and the streams still match plain decode."""
+    fi = FaultInjector(poison_logits={t: None for t in range(256)},
+                       poison_fmt="mxint4")
+    _, plain = _run(setup, None, logit_guard=False, max_new=12,
+                    max_len=48)
+    sc = SpecConfig(draft_fmt="mxint4", k=2, min_acceptance=0.9, window=2)
+    eng, spec = _run(setup, sc, injector=fi, logit_guard=False,
+                     max_new=12, max_len=48)
+    assert spec == plain
+    st_ = eng.stats
+    # it drafted long enough to measure, then the policy cut it off well
+    # short of one spec tick per decode tick
+    assert st_["spec_ticks"] >= sc.window
+    assert st_["spec_ticks"] < st_["ticks"]
+    _no_leak(eng)
+
+
+def test_spec_requires_greedy(setup):
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params,
+                  speculative=SpecConfig(draft_fmt="mxint4", k=2))
+    with pytest.raises(ValueError, match="greedy-only"):
+        eng.generate(_reqs(cfg, 1), greedy=False)
+
+
+def test_spec_rejects_bad_config(setup):
+    cfg, api, params, anchor = setup
+    with pytest.raises(ValueError, match="k.*>= 1"):
+        _engine(api, anchor, params,
+                speculative=SpecConfig(draft_fmt="mxint4", k=0))
+    with pytest.raises(ValueError, match="bf16"):
+        _engine(api, anchor, params,
+                speculative=SpecConfig(draft_fmt="bf16"))
+
+
+def test_spec_draft_fmt_equal_to_pinned_never_drafts(setup):
+    """allow_speculation vetoes draft_fmt == pinned (nothing cheaper to
+    draft with) — the engine silently runs plain decode."""
+    eng, spec = _run(setup, SpecConfig(draft_fmt="mxint8", k=4))
+    _, plain = _run(setup, None)
+    assert spec == plain
+    assert eng.stats["spec_ticks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance arithmetic (pure helper)
+# ---------------------------------------------------------------------------
+def test_spec_accept_counts_unit():
+    drafts = np.array([[5, 6, 7],      # all match  -> 3 + bonus = 4
+                       [5, 9, 7],      # first only -> 1 + bonus = 2
+                       [9, 6, 7],      # none       -> bonus only = 1
+                       [5, 6, 7]])     # all match, budget-clamped
+    anchor = np.array([[5, 6, 7, 8],
+                       [5, 6, 7, 8],
+                       [5, 6, 7, 8],
+                       [5, 6, 7, 8]])
+    budgets = np.array([9, 9, 9, 2])
+    assert spec_accept_counts(drafts, anchor, budgets).tolist() \
+        == [4, 2, 1, 2]
+    # budget 0 (masked / dead row) commits nothing
+    assert spec_accept_counts(drafts, anchor, np.zeros(4)).tolist() \
+        == [0, 0, 0, 0]
+    with pytest.raises(ValueError):
+        spec_accept_counts(drafts, anchor[:, :3], budgets)
+
+
+def test_policy_allow_speculation():
+    pol = FormatPolicy("mxint8")
+    assert pol.allow_speculation("mxint4", "mxint8")
+    assert not pol.allow_speculation("mxint8", "mxint8")
+    assert not pol.allow_speculation("mxint4", "mxint8",
+                                     acceptance_rate=0.1,
+                                     min_acceptance=0.5)
+    assert pol.allow_speculation("mxint4", "mxint8", acceptance_rate=None,
+                                 min_acceptance=0.5)
+    pol.quarantine("mxint4")
+    assert not pol.allow_speculation("mxint4", "mxint8")
+
+
+# ---------------------------------------------------------------------------
+# free-list exactness across accept/reject patterns
+# ---------------------------------------------------------------------------
+def _rollback_case(eng, rows, frontier, slot):
+    """Drive _rollback_slot_pages on a synthetic block table and check it
+    against the spec: pages past ceil(frontier/page) freed exactly once,
+    earlier pages and every other row byte-identical."""
+    bt = np.array(rows, np.int32)
+    before = bt.copy()
+    free: list = []
+    freed0 = eng._kv_pages_freed
+    eng._rollback_slot_pages(free, bt, slot, frontier)
+    keep = -(-frontier // PS)
+    expect_drop = [int(p) for p in before[slot, keep:] if p != 0]
+    assert sorted(free) == sorted(expect_drop)
+    assert eng._kv_pages_freed - freed0 == len(expect_drop)
+    assert bt[slot, :keep].tolist() == before[slot, :keep].tolist()
+    assert not bt[slot, keep:].any()
+    others = [i for i in range(bt.shape[0]) if i != slot]
+    assert bt[others].tolist() == before[others].tolist()
+
+
+def test_rollback_pages_seeded_slice(setup):
+    """Always-run seeded slice of the hypothesis property below."""
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params)
+    rng = np.random.default_rng(11)
+    for _ in range(50):
+        nrows, width = rng.integers(1, 5), rng.integers(1, 6)
+        rows = np.zeros((nrows, width), np.int64)
+        for i in range(nrows):
+            held = rng.integers(0, width + 1)
+            rows[i, :held] = rng.choice(
+                np.arange(1, 64), size=held, replace=False)
+        slot = int(rng.integers(0, nrows))
+        frontier = int(rng.integers(0, width * PS + 1))
+        _rollback_case(eng, rows.tolist(), frontier, slot)
+
+
+@hypothesis.given(
+    rows=st.lists(st.lists(st.integers(0, 63), min_size=1, max_size=5),
+                  min_size=1, max_size=4),
+    frontier=st.integers(0, 48),
+    slot_pick=st.integers(0, 3))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_rollback_pages_property(setup, rows, frontier, slot_pick):
+    """After ANY accept/reject pattern — i.e. any (block table, frontier)
+    pair — the rollback frees exactly the nonzero pages past the frontier
+    page and touches nothing else."""
+    cfg, api, params, anchor = setup
+    eng = _engine(api, anchor, params)
+    width = max(len(r) for r in rows)
+    padded = [r + [0] * (width - len(r)) for r in rows]
+    _rollback_case(eng, padded, frontier, slot_pick % len(rows))
+
+
+def test_spec_free_list_exact_seeded_waves(setup):
+    """End-to-end seeded slice: random wave shapes x {clean, poisoned}
+    drafts. Every wave must drain with alloc == freed and a stream
+    identical to plain anchor decode."""
+    cfg, api, params, anchor = setup
+    rng = np.random.default_rng(3)
+    for wave in range(3):
+        n = int(rng.integers(2, 5))
+        max_new = int(rng.integers(3, 10))
+        k = int(rng.integers(1, 5))
+        seed = int(rng.integers(0, 1 << 16))
+        poisoned = wave % 2 == 1
+        fi = FaultInjector(poison_logits={t: None for t in range(256)},
+                           poison_fmt="mxint4") if poisoned else None
+        reqs_p = _reqs(cfg, n, max_new=max_new, seed=seed)
+        reqs_s = _reqs(cfg, n, max_new=max_new, seed=seed)
+        _engine(api, anchor, params, logit_guard=False).generate(
+            reqs_p, greedy=True, fmt_override="mxint8")
+        eng = _engine(api, anchor, params, logit_guard=False,
+                      speculative=SpecConfig(draft_fmt="mxint4", k=k),
+                      fault_injector=fi)
+        eng.generate(reqs_s, greedy=True, fmt_override="mxint8")
+        assert _streams(reqs_s) == _streams(reqs_p), \
+            f"wave {wave} (k={k}, poisoned={poisoned})"
+        _no_leak(eng)
+        assert eng.stats["spec_ticks"] > 0
+
+
+# ---------------------------------------------------------------------------
+# full contract matrix (slow; CI runs it non-blocking)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("fused", [False, True])
+@pytest.mark.parametrize("attn", ["gather", "paged_kernel"])
+@pytest.mark.parametrize("draft", ["mxint4", "mxint6"])
+@pytest.mark.parametrize("k", [1, 4])
+def test_spec_matrix(setup, fused, attn, draft, k):
+    _, plain = _run(setup, None, fused=fused, attn_impl=attn)
+    eng, spec = _run(setup, SpecConfig(draft_fmt=draft, k=k),
+                     fused=fused, attn_impl=attn)
+    assert spec == plain, (fused, attn, draft, k)
+    assert eng.stats["spec_ticks"] > 0
+    _no_leak(eng)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fused,attn", [(False, "paged_kernel"),
+                                        (True, "gather")])
+def test_spec_poisoned_draft_matrix(setup, fused, attn):
+    """The adversarial acceptance~0 case on the contract corners the fast
+    test doesn't cover."""
+    fi = FaultInjector(poison_logits={t: None for t in range(256)},
+                       poison_fmt="mxint4")
+    _, plain = _run(setup, None, logit_guard=False, fused=fused,
+                    attn_impl=attn)
+    eng, spec = _run(setup, SpecConfig(draft_fmt="mxint4", k=4),
+                     injector=fi, logit_guard=False, fused=fused,
+                     attn_impl=attn)
+    assert spec == plain, (fused, attn)
+    assert eng.stats["spec_rejected"] > 0
+    _no_leak(eng)
