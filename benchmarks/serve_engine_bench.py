@@ -61,6 +61,7 @@ between admission modes, however, is a scheduling property and survives the
 interpreter overhead.
 """
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -343,6 +344,234 @@ def bench_speculative(api, anchor, params, *, slots, max_len, n_requests,
                          "not paying for itself on this workload")
 
 
+def bench_slo(api, anchor, params, *, slots, max_len, horizon, wl_seed,
+              page_size=8, burst_thresh=6):
+    """The --slo sweep (docs/serving_internals.md §10): SLO-tiered serving
+    from the measured cost model vs the static queue-depth policy, on the
+    SAME deterministic bursty multi-tenant workload.
+
+    Run A (static): FIFO admission, threshold-table policy — the pre-SLO
+    engine. It doubles as the calibration run: the per-tier TTFT budgets
+    are set from ITS measured percentiles, so the attainment gates are
+    machine-speed-independent. Run B (slo): tiered admission
+    (latency > throughput > best-effort), roofline-seeded + online-
+    calibrated CostModel driving the rung pick against the wave's tightest
+    TPOT budget.
+
+    Hard gates (process-failing):
+      - page accounting: kv_pages_alloc == kv_pages_freed in both runs;
+      - per-tier stream identity: every COMPLETED run-B request's stream
+        is bit-identical to a plain non-SLO engine serving the same
+        (rid, prompt) at run B's chosen format — SLO machinery moves
+        requests and formats, never tokens;
+      - tier ordering: run B's latency-tier TTFT attainment >= its
+        throughput-tier's (same budget, so this isolates admission order);
+      - the win: run B's latency-tier mean queue wait (ticks, arrival ->
+        admission — deterministic) <= run A's, at equal-or-better
+        aggregate decode ticks (B <= 1.05x A for the same token count).
+    """
+    from repro.serve.policy import FormatPolicy
+    from repro.serve.slo import CostModel
+    from repro.serve.engine import RequestStatus
+    from workloads import (TenantSpec, default_tenants, generate_workload,
+                           tenant_summary)
+
+    cfg = api.cfg
+    ladder = ((burst_thresh, "mxint4"), (0, "mxint8"))
+    eng_kw = dict(batch_slots=slots, max_len=max_len, param_template=params,
+                  fused=False, kv_layout="paged", kv_page_size=page_size,
+                  prefill_chunk="auto")
+
+    def make_workload(ttft_ms=None, tpot_ms=None):
+        tenants = default_tenants(ttft_ms=ttft_ms, tpot_ms=tpot_ms)
+        if ttft_ms is not None:
+            # Same TTFT budget on the throughput tenant: the attainment
+            # gap between tiers then measures admission order alone.
+            tenants = [dataclasses.replace(t, ttft_ms=ttft_ms)
+                       if t.tier == "throughput" else t for t in tenants]
+        return tenants, generate_workload(
+            tenants, horizon=horizon, vocab=cfg.vocab,
+            prompt_cap=max_len - 1, seed=wl_seed)
+
+    def run(reqs, policy, order):
+        eng = ElasticEngine(api, anchor, policy=policy,
+                            admission_order=order, **eng_kw)
+        # Warm every ladder rung's executables (full + partial chunk,
+        # decode) before the timed wave: TTFT budgets must measure
+        # scheduling, not jit compiles — and the warmup's clean decode
+        # ticks hand the cost model measured factors for BOTH rungs, so
+        # run B's picks are cost-driven from its first wave.
+        wrng = np.random.default_rng(2**20)
+        for nf, wfmt in enumerate(dict.fromkeys(f for _, f in ladder)):
+            eng.generate(
+                [Request(rid=10_000 + 10 * nf + j,
+                         prompt=wrng.integers(1, cfg.vocab, size=pl)
+                         .astype(np.int32), max_new=3)
+                 for j, pl in enumerate((8, 13))],
+                fmt_override=wfmt)
+        t0 = time.perf_counter()
+        eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        st = eng.stats
+        if st["kv_pages_alloc"] != st["kv_pages_freed"]:
+            raise SystemExit(
+                f"--slo ({order}) leaked KV pages: "
+                f"{st['kv_pages_alloc']} allocated, "
+                f"{st['kv_pages_freed']} freed")
+        return eng, st, dt
+
+    def ttft_from_arrival_ms(r):
+        if r.ttft_s is None or r.arrival_s is None:
+            return None
+        return (r.ttft_s - r.arrival_s) * 1e3
+
+    def tier_of(r):
+        return r.slo.tier if r.slo is not None else "best_effort"
+
+    def tier_rows(reqs, ttft_budget_ms):
+        rows = {}
+        for tier in ("latency", "throughput", "best_effort"):
+            sub = [r for r in reqs if tier_of(r) == tier]
+            if not sub:
+                continue
+            ttfts = [t for t in map(ttft_from_arrival_ms, sub)
+                     if t is not None]
+            waits = [r.admitted_tick - r.arrival_tick for r in sub
+                     if r.admitted_tick is not None]
+            # Both runs score against the SAME calibrated budget (run A's
+            # requests carry no SLOClass budgets — they predate the SLO)
+            budget = ttft_budget_ms if tier != "best_effort" else None
+            attain = None
+            if budget is not None and ttfts:
+                attain = sum(t <= budget for t in ttfts) / len(ttfts)
+            rows[tier] = {
+                "n": len(sub),
+                "completed": sum(r.status is RequestStatus.COMPLETED
+                                 for r in sub),
+                "ttft_attain": attain,
+                "ttft_p50_ms": _pct(ttfts, 0.5),
+                "wait_p50": _pct(waits, 0.5),
+                "wait_max": max(waits, default=0),
+                "wait_mean": sum(waits) / max(len(waits), 1),
+            }
+        return rows
+
+    # ---- run A: static queue-depth policy, FIFO admission (also the
+    # budget-calibration run) ---------------------------------------------
+    _, reqs_a = make_workload()
+    pol_a = FormatPolicy(anchor="mxint8", ladder=ladder)
+    eng_a, st_a, dt_a = run(reqs_a, pol_a, "fifo")
+    ttfts_a = [t for t in map(ttft_from_arrival_ms, reqs_a)
+               if t is not None]
+    decode_walls = [t["wall_s"] * 1e3 for t in eng_a.tick_trace
+                    if t["decode"]]
+    ttft_budget = _pct(ttfts_a, 0.6)
+    tpot_budget = _pct(decode_walls, 0.75)
+
+    # ---- run B: measured-cost-model policy, tiered admission ------------
+    _, reqs_b = make_workload(ttft_ms=ttft_budget, tpot_ms=tpot_budget)
+    cost = CostModel.from_roofline(
+        cfg, [f for _, f in ladder], max_len=max_len, kv_layout="paged",
+        kv_page_size=page_size, block_size=32)
+    pol_b = FormatPolicy(anchor="mxint8", ladder=ladder, cost=cost)
+    eng_b, st_b, dt_b = run(reqs_b, pol_b, "slo")
+
+    # ---- per-tier attainment table --------------------------------------
+    rows_a = tier_rows(reqs_a, ttft_budget)
+    rows_b = tier_rows(reqs_b, ttft_budget)
+    toks_a = sum(len(r.out_tokens) for r in reqs_a)
+    toks_b = sum(len(r.out_tokens) for r in reqs_b)
+    print(f"# workload: {len(reqs_a)} requests / {horizon} arrival ticks "
+          f"(seed {wl_seed}); budgets calibrated from run A: "
+          f"ttft<={ttft_budget:.1f}ms (p60), tpot<={tpot_budget:.1f}ms "
+          f"(p75 decode tick)")
+    print("slo,run,tier,requests,completed,ttft_attain,ttft_p50_ms,"
+          "wait_p50_ticks,wait_mean_ticks,wait_max_ticks")
+    for label, rows in (("static", rows_a), ("slo", rows_b)):
+        for tier, d in rows.items():
+            att = "n/a" if d["ttft_attain"] is None \
+                else f"{d['ttft_attain']:.2f}"
+            print(f"slo,{label},{tier},{d['n']},{d['completed']},{att},"
+                  f"{d['ttft_p50_ms']:.1f},{d['wait_p50']},"
+                  f"{d['wait_mean']:.2f},{d['wait_max']}")
+    for label, st, toks, dt, pol in (("static", st_a, toks_a, dt_a, pol_a),
+                                     ("slo", st_b, toks_b, dt_b, pol_b)):
+        fmts = ",".join(f"{f}:{pol.history.count(f)}"
+                        for f in dict.fromkeys(pol.history))
+        print(f"# {label}: {toks} tokens / {st['ticks']} decode ticks "
+              f"({toks / max(st['ticks'], 1):.2f} tok/tick, "
+              f"{toks / max(dt, 1e-9):.0f} tok/s wall), "
+              f"requeues={st['admission_requeues']}, "
+              f"failed_capacity="
+              f"{st['request_statuses'].get('failed_capacity', 0)}, "
+              f"picks=[{fmts}]")
+    print("# per-tenant (slo run):")
+    for name, d in sorted(tenant_summary(reqs_b).items()):
+        print(f"#   {name}: {d['requests']} reqs, {d['tokens_out']} tok, "
+              f"wait p50/max {d['wait_ticks_p50']}/{d['wait_ticks_max']} "
+              f"ticks, statuses {d['statuses']}")
+    if st_b["cost_model"]:
+        terms = {f: f"{v['predict_1row_ms']:.2f}ms*"
+                 if not v["ticks_observed"] else
+                 f"{v['predict_1row_ms']:.2f}ms({v['ticks_observed']}t)"
+                 for f, v in st_b["cost_model"].items()}
+        print(f"# cost model (1-row tick, * = prior-only): {terms}")
+
+    # ---- gate: per-format stream identity vs a plain non-SLO engine -----
+    by_fmt = {}
+    for r in reqs_b:
+        if r.status is RequestStatus.COMPLETED:
+            by_fmt.setdefault(r.fmt_used, []).append(r)
+    for fmt, group in sorted(by_fmt.items()):
+        eng_ref = ElasticEngine(api, anchor, **eng_kw)
+        refs = [Request(rid=r.rid, prompt=np.asarray(r.prompt).copy(),
+                        max_new=r.max_new) for r in group]
+        eng_ref.generate(refs, fmt_override=fmt)
+        diverged = [ref.rid for ref, r in zip(refs, group)
+                    if ref.out_tokens != r.out_tokens]
+        if diverged:
+            raise SystemExit(
+                f"--slo streams diverged from the plain non-SLO engine at "
+                f"{fmt} for rids {diverged} — SLO machinery must never "
+                f"change tokens")
+    print(f"# streams bit-identical to the plain non-SLO engine across "
+          f"{sum(len(g) for g in by_fmt.values())} completed requests in "
+          f"{len(by_fmt)} format group(s) = True")
+
+    # ---- gate: tier ordering within run B -------------------------------
+    att_lat = rows_b.get("latency", {}).get("ttft_attain")
+    att_thr = rows_b.get("throughput", {}).get("ttft_attain")
+    if att_lat is not None and att_thr is not None and att_lat < att_thr:
+        raise SystemExit(
+            f"latency-tier TTFT attainment ({att_lat:.2f}) fell below "
+            f"throughput-tier's ({att_thr:.2f}) under tiered admission")
+
+    # ---- gate: the win over the static policy ---------------------------
+    att_lat_a = rows_a.get("latency", {}).get("ttft_attain")
+    if att_lat_a is not None and att_lat is not None \
+            and att_lat < att_lat_a:
+        raise SystemExit(
+            f"slo run's latency-tier TTFT attainment ({att_lat:.2f}) fell "
+            f"below the static policy's ({att_lat_a:.2f})")
+    wait_a = rows_a.get("latency", {}).get("wait_mean", 0.0)
+    wait_b = rows_b.get("latency", {}).get("wait_mean", 0.0)
+    if wait_b > wait_a:
+        raise SystemExit(
+            f"slo run's latency-tier mean queue wait ({wait_b:.2f} ticks) "
+            f"exceeds the static policy's ({wait_a:.2f}) — tiered "
+            f"admission lost to FIFO")
+    if st_b["ticks"] > 1.05 * max(st_a["ticks"], 1):
+        raise SystemExit(
+            f"slo run spent {st_b['ticks']} decode ticks vs the static "
+            f"policy's {st_a['ticks']} (> 1.05x) — the SLO win is not "
+            f"allowed to cost aggregate throughput")
+    print(f"# gates: latency wait {wait_a:.2f} -> {wait_b:.2f} ticks "
+          f"(static -> slo), attain lat/thr "
+          f"{'n/a' if att_lat is None else f'{att_lat:.2f}'}/"
+          f"{'n/a' if att_thr is None else f'{att_thr:.2f}'}, decode ticks "
+          f"{st_a['ticks']} -> {st_b['ticks']} = all passed")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -394,6 +623,17 @@ def main():
                     help="draft rung for --speculative")
     ap.add_argument("--k", type=int, default=4,
                     help="draft depth for --speculative")
+    ap.add_argument("--slo", action="store_true",
+                    help="run the SLO-tier sweep instead of the perf "
+                         "matrix: static queue-depth policy vs measured-"
+                         "cost-model policy on a deterministic bursty "
+                         "multi-tenant workload, with per-tier TTFT/wait "
+                         "attainment columns and hard identity/ordering/"
+                         "throughput gates")
+    ap.add_argument("--horizon", type=int, default=24,
+                    help="arrival-window ticks for the --slo workload")
+    ap.add_argument("--wl-seed", type=int, default=0,
+                    help="workload seed for --slo")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -408,6 +648,12 @@ def main():
                     max_len=args.max_len, n_requests=args.requests,
                     max_new=args.max_new, vocab=cfg.vocab,
                     rates=[float(x) for x in args.fault_rates.split(",")])
+        return
+
+    if args.slo:
+        bench_slo(api, anchor, params, slots=args.slots,
+                  max_len=args.max_len, horizon=args.horizon,
+                  wl_seed=args.wl_seed, page_size=args.page_size)
         return
 
     if args.speculative:

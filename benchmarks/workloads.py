@@ -1,0 +1,163 @@
+"""Deterministic bursty multi-tenant workload generator.
+
+The "millions of users" scenario (ROADMAP open item 1) made measurable:
+each tenant is a traffic class — a Poisson base rate of request arrivals
+per scheduler tick, optional periodic bursts on top, heavy-tailed
+(lognormal) prompt lengths, a tier (latency / throughput / best_effort
+with TTFT/TPOT budgets), and per-tenant sampling params. The generator
+flattens every tenant's arrivals into one request list for
+``ElasticEngine.generate`` — arrival times ride ``Request.arrival_tick``
+(the engine's admission gate), attribution rides ``Request.tenant``.
+
+Everything is driven by ONE ``numpy`` Generator seeded from ``seed``,
+and tenants are iterated in list order tick by tick, so the same
+``(tenants, horizon, seed)`` triple reproduces the identical trace —
+rids, arrival ticks, prompt token-for-token (tests/test_workloads.py
+pins this down). That determinism is what lets the bench compare
+policies on the *same* workload and lets CI gate on per-tier stream
+identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import Request
+from repro.serve.slo import SLOClass, TIERS
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's traffic class.
+
+    ``rate`` is the Poisson mean of arrivals per scheduler tick; every
+    ``burst_every`` ticks (0 = never) an extra ``burst_size`` requests
+    land at once — the bursty half of "bursty multi-tenant". Prompt
+    lengths are lognormal (median ``prompt_median``, log-sigma
+    ``prompt_sigma``), clipped to the engine's prompt capacity at
+    generation time: a heavy tail, but never an unservable request
+    unless ``clip_prompts=False`` asks for admission-reject coverage.
+    """
+
+    name: str
+    tier: str = "best_effort"
+    rate: float = 0.3
+    burst_every: int = 0
+    burst_size: int = 0
+    prompt_median: float = 10.0
+    prompt_sigma: float = 0.5
+    max_new: int = 8
+    temperature: Optional[float] = None
+    top_p: Optional[float] = None
+    ttft_ms: Optional[float] = None    # budget for this tenant's SLOClass
+    tpot_ms: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.tier not in TIERS:
+            raise ValueError(f"tier must be one of {TIERS}, "
+                             f"got {self.tier!r}")
+        if self.rate < 0:
+            raise ValueError(f"rate must be >= 0, got {self.rate}")
+
+    def slo(self) -> Optional[SLOClass]:
+        """The SLO riding each of this tenant's requests (None for a
+        budget-less best-effort tenant — the engine's default)."""
+        if self.tier == "best_effort" and self.ttft_ms is None \
+                and self.tpot_ms is None:
+            return None
+        return SLOClass(ttft_ms=self.ttft_ms, tpot_ms=self.tpot_ms,
+                        tier=self.tier)
+
+
+def default_tenants(*, ttft_ms: Optional[float] = None,
+                    tpot_ms: Optional[float] = None) -> List[TenantSpec]:
+    """The bench's reference mix: an interactive latency tenant (steady
+    trickle, short prompts), a bulk throughput tenant (bursty, long-tailed
+    prompts, more output), and a best-effort scavenger. Budgets default
+    to None so the bench can calibrate them from a measured reference
+    run (machine-independent gates) before building SLO classes."""
+    return [
+        TenantSpec(name="interactive", tier="latency", rate=0.25,
+                   prompt_median=8.0, prompt_sigma=0.4, max_new=6,
+                   ttft_ms=ttft_ms, tpot_ms=tpot_ms),
+        TenantSpec(name="bulk", tier="throughput", rate=0.15,
+                   burst_every=8, burst_size=3, prompt_median=14.0,
+                   prompt_sigma=0.8, max_new=10),
+        TenantSpec(name="scavenger", tier="best_effort", rate=0.1,
+                   prompt_median=10.0, prompt_sigma=0.6, max_new=8),
+    ]
+
+
+def generate_workload(tenants: Sequence[TenantSpec], *, horizon: int,
+                      vocab: int, prompt_cap: int, seed: int = 0,
+                      clip_prompts: bool = True) -> List[Request]:
+    """Flatten every tenant's arrivals over ``horizon`` ticks into one
+    deterministic request list, ordered by (arrival_tick, tenant index)
+    with rids dense in that order.
+
+    ``prompt_cap`` should be the engine's ``prompt_capacity``
+    (``max_len - 1``); with ``clip_prompts=False`` the lognormal tail may
+    exceed it, exercising the engine's fail-fast admission reject path
+    instead of being clipped into servability.
+    """
+    if horizon <= 0:
+        raise ValueError(f"horizon must be positive, got {horizon}")
+    rng = np.random.default_rng(seed)
+    out: List[Request] = []
+    rid = 0
+    for t in range(horizon):
+        for spec in tenants:
+            n = int(rng.poisson(spec.rate))
+            if spec.burst_every and t and t % spec.burst_every == 0:
+                n += spec.burst_size
+            for _ in range(n):
+                plen = int(round(float(rng.lognormal(
+                    math.log(spec.prompt_median), spec.prompt_sigma))))
+                plen = max(1, plen)
+                if clip_prompts:
+                    plen = min(plen, prompt_cap)
+                prompt = rng.integers(1, vocab, size=plen,
+                                      dtype=np.int64).astype(np.int32)
+                out.append(Request(
+                    rid=rid, prompt=prompt, max_new=spec.max_new,
+                    slo=spec.slo(), tenant=spec.name, arrival_tick=t,
+                    temperature=spec.temperature, top_p=spec.top_p))
+                rid += 1
+    return out
+
+
+def trace_fingerprint(requests: Sequence[Request]) -> List[tuple]:
+    """Hashable per-request summary for determinism assertions: the
+    fields the generator controls, prompts included token-for-token."""
+    return [(r.rid, r.tenant, r.arrival_tick, int(r.max_new),
+             None if r.slo is None else (r.slo.tier, r.slo.ttft_ms,
+                                         r.slo.tpot_ms),
+             r.temperature, r.top_p,
+             tuple(int(x) for x in np.asarray(r.prompt)))
+            for r in requests]
+
+
+def tenant_summary(requests: Sequence[Request]) -> Dict[str, dict]:
+    """Per-tenant accounting after a wave: terminal-status counts,
+    admission-wait percentiles (ticks from arrival to admission), and
+    output-token totals — the fairness/backpressure columns of the
+    ``--slo`` bench."""
+    by: Dict[str, dict] = {}
+    for r in requests:
+        name = r.tenant or "?"
+        d = by.setdefault(name, {"requests": 0, "tokens_out": 0,
+                                 "statuses": {}, "wait_ticks": []})
+        d["requests"] += 1
+        d["tokens_out"] += len(r.out_tokens)
+        d["statuses"][r.status.value] = \
+            d["statuses"].get(r.status.value, 0) + 1
+        if r.admitted_tick is not None:
+            d["wait_ticks"].append(r.admitted_tick - r.arrival_tick)
+    for d in by.values():
+        w = sorted(d.pop("wait_ticks"))
+        d["wait_ticks_p50"] = w[len(w) // 2] if w else None
+        d["wait_ticks_max"] = w[-1] if w else None
+    return by

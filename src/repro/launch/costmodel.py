@@ -287,6 +287,78 @@ def hbm_decode(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshDesc,
 
 
 # =============================================================================
+# Serving-engine roofline terms (the measured-cost-model seed)
+# =============================================================================
+# These are the analytic counterparts of the byte counters the packed-weight
+# serving engine actually measures — ``serve.packed_params.weight_stream_bytes``
+# over the cached tree and ``ElasticEngine.stats()["attn_read_bytes"]`` — and
+# they are a *tested contract*: tests/test_costmodel.py asserts they agree
+# with a real engine run within a stated tolerance, per format x {dense,
+# paged}. ``serve.slo.CostModel.from_roofline`` seeds its per-format terms
+# from them, then calibrates online from observed tick timings.
+
+def serve_weight_stream_bytes(cfg: ModelConfig, fmt_name: str,
+                              block_size: int = 32) -> float:
+    """Bytes one decode tick streams for the packed serving tree at
+    ``fmt_name`` (codes + E8M0 scales for the quantized stack, raw leaves
+    at ``cfg.compute_dtype``; the ``"bf16"`` pseudo-format is the dense
+    tree). Mirrors ``make_packed_params``'s packing rules: every ndim>=2
+    stack matmul weight is quantized, embeddings and norm vectors stay raw
+    (norm vectors are dropped here — they are O(d_model) noise)."""
+    import jax.numpy as jnp
+    item = jnp.dtype(cfg.compute_dtype).itemsize
+    embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    stack = total_params(cfg) - embed
+    if fmt_name == "bf16":
+        return (stack + embed) * item
+    from repro.core.formats import get_format
+    fmt = get_format(fmt_name, block_size)
+    code_bytes = 0.5 if (fmt.kind == "int" and fmt.bits == 4) else 1.0
+    return stack * (code_bytes + 1.0 / block_size) + embed * item
+
+
+def serve_attn_read_span(cfg: ModelConfig, max_len: int,
+                         kv_layout: str = "dense",
+                         kv_page_size: int = 16) -> int:
+    """KV tokens one gather-path decode read spans per batch row: the whole
+    logical view — ``max_len`` (+ vision prefix) for the dense layout, the
+    block table's page span for the paged layout. The gather-free kernel
+    reads only ``ceil(cache_len/page)`` pages of it; the engine accounts
+    that difference per tick, this term is the layout's upper bound."""
+    logical = max_len + cfg.vision_tokens
+    if kv_layout == "paged":
+        return -(-logical // kv_page_size) * kv_page_size
+    return logical
+
+
+def serve_attn_bytes_per_row(cfg: ModelConfig, span_tokens: int) -> float:
+    """HBM bytes one decode row's attention reads per tick when its read
+    spans ``span_tokens`` KV positions: K+V at ``cfg.compute_dtype`` across
+    every attention layer. The analytic twin of the engine's
+    ``attn_read_bytes`` accounting (same per-token multiplier)."""
+    import jax.numpy as jnp
+    item = jnp.dtype(cfg.compute_dtype).itemsize
+    return float(span_tokens) * _attn_layers(cfg) * 2 \
+        * cfg.n_kv_heads * cfg.hd * item
+
+
+def serve_roofline_terms(cfg: ModelConfig, formats,
+                         *, max_len: int, kv_layout: str = "dense",
+                         kv_page_size: int = 16,
+                         block_size: int = 32) -> Dict[str, Dict[str, float]]:
+    """Per-format decode roofline terms for the serving cost model:
+    ``{fmt: {"weight_bytes": <per tick>, "attn_bytes_per_row": <per row per
+    tick>}}``. The weight read happens once per tick regardless of batch
+    occupancy (one fused step streams the whole tree); the attention read
+    scales with live rows."""
+    span = serve_attn_read_span(cfg, max_len, kv_layout, kv_page_size)
+    attn = serve_attn_bytes_per_row(cfg, span)
+    return {f: {"weight_bytes": serve_weight_stream_bytes(cfg, f, block_size),
+                "attn_bytes_per_row": attn}
+            for f in formats}
+
+
+# =============================================================================
 # Collective bytes per device
 # =============================================================================
 def collectives_train(cfg: ModelConfig, shape: ShapeSpec,

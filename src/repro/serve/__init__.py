@@ -1,2 +1,3 @@
 from repro.serve.engine import ElasticEngine, Request
-from repro.serve.policy import FormatPolicy
+from repro.serve.policy import FormatPolicy, SpecConfig
+from repro.serve.slo import CostModel, SLOClass

@@ -103,6 +103,7 @@ from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
                                        make_packed_verify_step,
                                        weight_stream_bytes)
 from repro.serve.policy import FormatPolicy, SpecConfig
+from repro.serve.slo import SLOClass, tier_rank
 
 DENSE_BF16 = "bf16"   # pseudo-format: dense anchor-precision weights
 
@@ -133,7 +134,11 @@ def _sample_one(key, logits, temperature, top_p):
                                                             -jnp.inf))
 
 
-_sample_batch = jax.jit(jax.vmap(_sample_one, in_axes=(0, 0, None, None)))
+# Per-slot temperature/top_p lanes: each request samples with its own
+# params (Request.temperature/top_p; engine ctor values are the defaults).
+# Scalar division/threshold per lane — numerically identical per row to the
+# old broadcast-scalar vmap, so streams are bit-stable across the change.
+_sample_batch = jax.jit(jax.vmap(_sample_one, in_axes=(0, 0, 0, 0)))
 
 
 class RequestStatus(str, enum.Enum):
@@ -171,6 +176,21 @@ class Request:
     status: RequestStatus = RequestStatus.QUEUED
     error: Optional[str] = None     # set with any non-COMPLETED terminal
     cancel_requested: bool = False
+    # ---- per-request service objectives & sampling (docs §10) ----------
+    slo: Optional["SLOClass"] = None    # tier + TTFT/TPOT budgets; None =
+    #                                     best-effort, no budgets
+    tenant: Optional[str] = None        # workload attribution (fairness
+    #                                     accounting in the bench)
+    arrival_tick: int = 0           # scheduler tick this request becomes
+    #                                 visible to admission (0 = already
+    #                                 queued, the pre-SLO behavior)
+    arrival_s: Optional[float] = None   # wall clock when it came due
+    #                                     (stamped by the engine; TTFT
+    #                                     against the SLO is ttft_s minus
+    #                                     this)
+    admitted_tick: Optional[int] = None  # tick admission claimed it
+    temperature: Optional[float] = None  # None -> engine default
+    top_p: Optional[float] = None        # None -> engine default
 
     def cancel(self) -> None:
         """Ask the engine to retire this request as CANCELLED at the next
@@ -287,7 +307,8 @@ class ElasticEngine:
                  logit_guard: bool = True,
                  max_step_retries: int = 2,
                  fault_injector=None,
-                 speculative: Optional[SpecConfig] = None):
+                 speculative: Optional[SpecConfig] = None,
+                 admission_order: str = "fifo"):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
@@ -306,6 +327,18 @@ class ElasticEngine:
             self.fused = fused
         self.temperature = temperature
         self.top_p = top_p
+        # Per-slot sampling lanes (defaults now, per-request values set at
+        # complete_admission — before the slot's first draw).
+        self._slot_temp = np.full((self.slots,), temperature, np.float32)
+        self._slot_topp = np.full((self.slots,), top_p, np.float32)
+        # Admission ordering among ARRIVED queued requests (docs §10):
+        # "fifo" preserves submission order; "slo" serves latency-tier
+        # ahead of throughput-tier ahead of best-effort, FIFO within a
+        # tier — the structural lever behind per-tier TTFT attainment.
+        if admission_order not in ("fifo", "slo"):
+            raise ValueError(f"unknown admission_order {admission_order!r};"
+                             " one of ('fifo', 'slo')")
+        self.admission_order = admission_order
         self._template = param_template if param_template is not None else \
             jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
         self._block_size = anchor_block_size(anchor)
@@ -352,6 +385,11 @@ class ElasticEngine:
         self._attn_layers = 0 if cfg.family == "ssm" else sum(
             cfg.is_attn_layer(j) for j in range(cfg.scan_group)) \
             * cfg.n_groups
+        # HBM bytes per KV token read (K+V, all attention layers) — the one
+        # multiplier behind stats()["attn_read_bytes"] and the cost model's
+        # measured attention term.
+        self._attn_token_bytes = self._attn_layers * 2 * cfg.n_kv_heads \
+            * cfg.hd * jnp.dtype(cfg.compute_dtype).itemsize
         # Chunked prefill admission (None = monolithic; see class docstring
         # and docs/serving_internals.md "Admission & scheduling").
         if prefill_chunk == "auto":
@@ -439,6 +477,8 @@ class ElasticEngine:
         # Tiny jitted guard: one (rows,) bool transfer per checked tick.
         self._finite_rows = jax.jit(lambda lg: jnp.isfinite(lg).all(axis=-1))
         self._admission_requeues = 0
+        self._fmt_decode_ticks: Dict[str, int] = {}  # clean decode ticks
+        #                          per format (cost-model compile warmup)
         self.tick_trace: List[Dict[str, float]] = []   # reset per generate
         self._kv_pages_alloc = 0
         self._kv_pages_freed = 0
@@ -576,6 +616,13 @@ class ElasticEngine:
                 w = self.dense_weights_for(fmt_name)
             self._weights[fmt_name] = w
             self._fmt_swaps += 1
+            if self.policy.cost is not None:
+                # Replace the format's analytic weight term with the bytes
+                # the cached tree actually streams (seed() keeps any
+                # learned calibration factor).
+                self.policy.cost.seed(
+                    fmt_name, weight_stream_bytes(w),
+                    self._attn_read_span * self._attn_token_bytes)
         return self._weights[fmt_name]
 
     def dense_weights_for(self, fmt_name: str):
@@ -671,18 +718,38 @@ class ElasticEngine:
                         f"{allocatable} allocatable")
         return None
 
-    def _pop_admissible(self, pending: List[Request]) -> Optional[Request]:
-        """Next servable request off the queue head. Unservable ones
+    def _pop_admissible(self, pending: List[Request],
+                        tick: Optional[int] = None) -> Optional[Request]:
+        """Next servable ARRIVED request off the queue. Unservable ones
         (``_admission_reject``) terminate FAILED_CAPACITY right here: a
         malformed request costs itself, never the engine or the queue
-        behind it."""
-        while pending:
-            r = pending.pop(0)
+        behind it.
+
+        ``tick`` gates arrivals (``Request.arrival_tick``; None = treat
+        everything as arrived). Among arrived requests, ``admission_order``
+        decides: "fifo" takes the earliest-queued; "slo" the best (tier
+        rank, queue position) pair — latency-tier first, FIFO within a
+        tier, so within-tier fairness is positional and starvation-free
+        (a finite workload drains tier by tier).
+        """
+        while True:
+            best_key, idx = None, None
+            for j, r in enumerate(pending):
+                if tick is not None and r.arrival_tick > tick:
+                    continue
+                key = (tier_rank(r.slo), j) \
+                    if self.admission_order == "slo" else (0, j)
+                if best_key is None or key < best_key:
+                    best_key, idx = key, j
+            if idx is None:
+                return None
+            r = pending.pop(idx)
             reason = self._admission_reject(r)
             if reason is None:
+                if tick is not None:
+                    r.admitted_tick = tick
                 return r
             self._finish(r, RequestStatus.FAILED_CAPACITY, reason)
-        return None
 
     @staticmethod
     def _capacity_victim(active: List[Optional[Request]],
@@ -905,6 +972,12 @@ class ElasticEngine:
             nonlocal tokens
             self._slot_keys = self._slot_keys.at[i].set(
                 jax.random.fold_in(self._key, r.rid))
+            # Per-request sampling params land with the RNG reseed — before
+            # the first draw, so the whole stream (first token included)
+            # uses them.
+            self._slot_temp[i] = self.temperature \
+                if r.temperature is None else r.temperature
+            self._slot_topp[i] = self.top_p if r.top_p is None else r.top_p
             first = int(self._sample(logits[None], greedy, slot=i)[0])
             tokens = tokens.at[i, 0].set(first)
             r.fmt_used = pinned            # pinned for the whole sequence
@@ -965,6 +1038,9 @@ class ElasticEngine:
                 return None
 
             for r in list(pending):
+                if r.arrival_s is None and r.arrival_tick <= tick:
+                    r.arrival_s = now_elapsed   # came due this tick; SLO
+                    #                             TTFT counts from here
                 verdict = expired(r)
                 if verdict is not None:
                     pending.remove(r)
@@ -992,13 +1068,31 @@ class ElasticEngine:
                 if page is not None:
                     cache = self._nan_pool_page(cache, page)
 
+            # ---- arrival gating: nothing live and every queued request
+            # still in the future (Request.arrival_tick) makes this an
+            # idle tick — record it and advance the clock so arrivals come
+            # due (the workload generator schedules in scheduler ticks).
+            if filling is None and not any(a is not None for a in active) \
+                    and not any(r.arrival_tick <= tick for r in pending):
+                pinned = None
+                self._record_tick(0, 0, 0, time.perf_counter() - t_tick,
+                                  execs=0, rows=0, decode_rows=0)
+                continue
+
             if pinned is None:             # engine drained: re-pick format
-                # Load counts queued requests AND their pending prompt
-                # tokens, so a queue of long prompts downshifts before the
-                # admissions start, not after (serve/policy.py).
-                pinned = fmt_override or self.policy.pick(
-                    queue_depth=len(pending), active=0,
-                    prefill_tokens=sum(r.prompt.size for r in pending))
+                # Load counts ARRIVED queued requests AND their pending
+                # prompt tokens, so a queue of long prompts downshifts
+                # before the admissions start, not after (serve/policy.py).
+                # With a cost model attached the wave's tightest TPOT
+                # budget and expected decode occupancy drive the pick
+                # instead (docs §10); fmt_override remains operator law.
+                arrived = [r for r in pending if r.arrival_tick <= tick]
+                pinned = self.policy.pick(
+                    queue_depth=len(arrived), active=0,
+                    prefill_tokens=sum(r.prompt.size for r in arrived),
+                    tpot_budget_ms=self._tightest_tpot_ms(arrived),
+                    decode_rows=max(1, min(b, len(arrived))),
+                    override=fmt_override)
             self.set_format(pinned)
             tick_pf_tokens = 0
             tick_pf_chunks = 0
@@ -1012,7 +1106,7 @@ class ElasticEngine:
                 for i in range(b):
                     if active[i] is not None or wait_pages:
                         continue
-                    r = self._pop_admissible(pending)
+                    r = self._pop_admissible(pending, tick)
                     if r is None:
                         break
                     r.status = RequestStatus.RUNNING
@@ -1079,7 +1173,7 @@ class ElasticEngine:
                 # chunk runs as its own executable or rides the decode batch
                 # is the scheduler's call, below.
                 if filling is None and not wait_pages and None in active:
-                    cand = self._pop_admissible(pending)
+                    cand = self._pop_admissible(pending, tick)
                     if cand is not None:
                         fill_slot = active.index(None)
                         filling, fill_cursor = cand, 0
@@ -1583,6 +1677,7 @@ class ElasticEngine:
             nxt = self._sample(logits, greedy)
             tokens = nxt[:, None].astype(jnp.int32)
             self._ticks += 1
+            attn_before = self._attn_tokens_read
 
             # Attention-read accounting for the tick that just ran. Every
             # batch row is processed (free/mid-prefill slots are masked, not
@@ -1660,13 +1755,39 @@ class ElasticEngine:
                     slot_len[fill_slot] = plen
                     complete_admission(fill_slot, filling, logits[fill_slot])
                     filling = None
+            # ---- cost-model calibration: only CLEAN pure-decode ticks
+            # (no prefill work, exactly one executable — no replays) are
+            # attributable to the pinned format's per-tick cost; the
+            # measured attention read refreshes the per-row byte term.
+            cost = self.policy.cost
+            rows_d = int(mask.sum())
+            if cost is not None and rows_d and tick_pf_chunks == 0 \
+                    and tick_execs == 1:
+                seen = self._fmt_decode_ticks.get(pinned, 0)
+                self._fmt_decode_ticks[pinned] = seen + 1
+                if seen:   # a format's first clean tick pays jit compile —
+                    #        warmup, not cost; never fold it into the model
+                    cost.observe(
+                        pinned, rows_d, time.perf_counter() - t_tick,
+                        attn_bytes_per_row=(self._attn_tokens_read
+                                            - attn_before)
+                        * self._attn_token_bytes / rows_d)
             self._record_tick(tick_pf_tokens, tick_pf_chunks, 1,
                               time.perf_counter() - t_tick,
                               execs=tick_execs, rows=tick_rows,
-                              decode_rows=int(mask.sum()))
+                              decode_rows=rows_d)
             if all(a is None for a in active) and filling is None:
                 pinned = None
         return requests
+
+    @staticmethod
+    def _tightest_tpot_ms(reqs: List[Request]) -> Optional[float]:
+        """The wave's binding per-token budget: the minimum ``tpot_ms``
+        among requests that carry one (None when nobody does — the policy
+        then falls back to its threshold table)."""
+        vals = [r.slo.tpot_ms for r in reqs
+                if r.slo is not None and r.slo.tpot_ms is not None]
+        return min(vals) if vals else None
 
     def _record_tick(self, prefill_tokens: int, prefill_chunks: int,
                      decode: int, wall_s: float, *, execs: int = 0,
@@ -1737,13 +1858,15 @@ class ElasticEngine:
         """
         if greedy or self.temperature <= 0:
             return jnp.argmax(logits, -1)
+        temps = jnp.asarray(self._slot_temp)
+        tops = jnp.asarray(self._slot_topp)
         if slot is None:
             self._slot_keys, toks = _sample_batch(
-                self._slot_keys, logits, self.temperature, self.top_p)
+                self._slot_keys, logits, temps, tops)
             return toks
         new_key, toks = _sample_batch(
-            self._slot_keys[slot][None], logits, self.temperature,
-            self.top_p)
+            self._slot_keys[slot][None], logits, temps[slot][None],
+            tops[slot][None])
         self._slot_keys = self._slot_keys.at[slot].set(new_key[0])
         return toks
 
@@ -1779,6 +1902,7 @@ class ElasticEngine:
             "bucket": self._bucket,
             "temperature": self.temperature,
             "top_p": self.top_p,
+            "admission_order": self.admission_order,
             # string-encoded so the JSON manifest round-trips exactly
             "speculative": (f"{self.speculative.draft_fmt}:k"
                             f"{self.speculative.k}"
@@ -1802,6 +1926,8 @@ class ElasticEngine:
         arrays["tokens"] = np.asarray(st["tokens"])
         arrays["slot_keys"] = np.asarray(self._slot_keys)
         arrays["engine_key"] = np.asarray(self._key)
+        arrays["slot_temp"] = self._slot_temp.copy()
+        arrays["slot_topp"] = self._slot_topp.copy()
         if st["bt"] is not None:
             arrays["bt"] = np.asarray(st["bt"])
         for r in requests:
@@ -1821,7 +1947,15 @@ class ElasticEngine:
                           "status": r.status.value, "error": r.error,
                           "fmt_used": r.fmt_used, "ttft_s": r.ttft_s,
                           "deadline_s": r.deadline_s, "done": bool(r.done),
-                          "cancel_requested": bool(r.cancel_requested)}
+                          "cancel_requested": bool(r.cancel_requested),
+                          "slo": (r.slo.to_dict() if r.slo is not None
+                                  else None),
+                          "tenant": r.tenant,
+                          "arrival_tick": int(r.arrival_tick),
+                          "arrival_s": r.arrival_s,
+                          "admitted_tick": r.admitted_tick,
+                          "temperature": r.temperature,
+                          "top_p": r.top_p}
                          for r in requests],
             "pending": [r.rid for r in st["pending"]],
             "active": [(a.rid if a is not None else None)
@@ -1892,6 +2026,11 @@ class ElasticEngine:
             for n, t in enumerate(tmpl_leaves)])
         self._key = jnp.asarray(arrays["engine_key"])
         self._slot_keys = jnp.asarray(arrays["slot_keys"])
+        if "slot_temp" in arrays:
+            self._slot_temp = np.asarray(arrays["slot_temp"],
+                                         np.float32).copy()
+            self._slot_topp = np.asarray(arrays["slot_topp"],
+                                         np.float32).copy()
         by_rid: Dict[int, Request] = {}
         requests: List[Request] = []
         for rd in meta["requests"]:
@@ -1905,6 +2044,14 @@ class ElasticEngine:
             r.deadline_s = rd["deadline_s"]
             r.done = rd["done"]
             r.cancel_requested = rd["cancel_requested"]
+            sd = rd.get("slo")
+            r.slo = SLOClass.from_dict(sd) if sd is not None else None
+            r.tenant = rd.get("tenant")
+            r.arrival_tick = int(rd.get("arrival_tick", 0))
+            r.arrival_s = rd.get("arrival_s")
+            r.admitted_tick = rd.get("admitted_tick")
+            r.temperature = rd.get("temperature")
+            r.top_p = rd.get("top_p")
             by_rid[r.rid] = r
             requests.append(r)
         c = meta["counters"]
@@ -2007,7 +2154,8 @@ class ElasticEngine:
             "attn_impl": self.attn_impl,
             "attn_tokens_read": self._attn_tokens_read,
             "attn_read_bytes": self._attn_tokens_read
-            * self._attn_layers * 2 * self.api.cfg.n_kv_heads
-            * self.api.cfg.hd
-            * jnp.dtype(self.api.cfg.compute_dtype).itemsize,
+            * self._attn_token_bytes,
+            "admission_order": self.admission_order,
+            "cost_model": (self.policy.cost.snapshot()
+                           if self.policy.cost is not None else None),
         }

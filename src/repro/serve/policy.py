@@ -21,11 +21,23 @@ logits), the engine walks ``escalate(fmt)`` one rung toward the anchor and
 replays the tick, and ``quarantine(fmt)`` keeps ``pick`` from handing out
 the misbehaving rung to later batch waves. The anchor itself is never
 skipped — it is the checkpoint's native precision, the end of the ladder.
+
+With a ``cost`` model attached (``serve/slo.py::CostModel``, docs §10) the
+threshold table becomes the *fallback*: when the wave carries a TPOT budget
+and at least one rung has measured cost, ``pick`` instead chooses the
+WIDEST (highest-precision) non-quarantined rung whose predicted decode-tick
+time fits the batch's tightest budget — quality is the objective, the SLO
+is the constraint. If no rung fits, the fastest predicted rung is the best
+the hardware can do. With no budget in the wave, or no measurements yet,
+the queue-depth table decides exactly as before, so an engine without SLOs
+behaves bit-identically to the pre-cost-model policy.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional, Set, Tuple
+
+from repro.serve.slo import CostModel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +75,10 @@ class FormatPolicy:
     # One queued request "counts double" per this many pending prompt tokens
     # — the ladder thresholds stay in queue-depth units.
     prefill_token_unit: int = 64
+    # Measured per-format tick cost (serve/slo.py). None = pure threshold
+    # policy; attached, it takes over whenever a wave carries a TPOT budget
+    # and at least one rung is measured.
+    cost: Optional[CostModel] = None
     _last: str = dataclasses.field(default="", init=False)
     _stable: int = dataclasses.field(default=0, init=False)
     history: List[str] = dataclasses.field(default_factory=list, init=False)
@@ -114,14 +130,62 @@ class FormatPolicy:
             return False
         return True
 
+    def _cost_pick(self, tpot_budget_ms: Optional[float],
+                   decode_rows: Optional[int]) -> Optional[str]:
+        """Cost-model rung choice, or None when the threshold table must
+        decide (no model, no budget in the wave, or nothing measured yet
+        — the degradation contract tests/test_policy.py pins down).
+
+        Among non-quarantined rungs with a cost estimate (anchor always
+        eligible — it is exempt from quarantine), take the WIDEST whose
+        predicted tick time at ``decode_rows`` occupancy fits the budget;
+        if none fits, the fastest predicted rung. Ladder order is
+        deepest-queue (narrowest) first, so "widest" is the last match.
+        """
+        cost = self.cost
+        if cost is None or tpot_budget_ms is None:
+            return None
+        if not cost.any_measured():
+            return None
+        rows = 1 if decode_rows is None else max(1, int(decode_rows))
+        fmts = [f for _, f in self.ladder]          # narrow -> wide
+        cands = [f for f in fmts
+                 if cost.has_estimate(f)
+                 and (f not in self.quarantined or f == self.anchor)]
+        if not cands:
+            return None
+        feasible = [f for f in cands
+                    if cost.predict_ms(f, rows) <= tpot_budget_ms]
+        if feasible:
+            return feasible[-1]
+        return min(cands, key=lambda f: cost.predict_ms(f, rows))
+
     def pick(self, queue_depth: int, active: int = 0,
-             prefill_tokens: int = 0) -> str:
-        load = queue_depth + prefill_tokens // self.prefill_token_unit
-        target = self.anchor
-        for thresh, fmt in self.ladder:
-            if load >= thresh:
-                target = fmt
-                break
+             prefill_tokens: int = 0, *,
+             tpot_budget_ms: Optional[float] = None,
+             decode_rows: Optional[int] = None,
+             override: Optional[str] = None) -> str:
+        """Choose the next batch wave's pinned format.
+
+        ``override`` is operator intent (``generate(fmt_override=...)``):
+        it wins over load, cost, quarantine and hysteresis, and leaves the
+        hysteresis state untouched so the next free-running pick resumes
+        where it left off. ``tpot_budget_ms`` is the tightest per-token
+        budget among the wave's requests (None when none carry one);
+        ``decode_rows`` the expected live decode rows, for the occupancy
+        term of the cost prediction.
+        """
+        if override is not None:
+            self.history.append(override)
+            return override
+        target = self._cost_pick(tpot_budget_ms, decode_rows)
+        if target is None:
+            load = queue_depth + prefill_tokens // self.prefill_token_unit
+            target = self.anchor
+            for thresh, fmt in self.ladder:
+                if load >= thresh:
+                    target = fmt
+                    break
         while target in self.quarantined:
             target = self.escalate(target) or self.anchor
         if self._last and target != self._last:

@@ -120,3 +120,68 @@ def test_roofline_terms_reasonable():
     m4 = cm.roofline(get_config("mixtral-8x7b"), SHAPES["long_500k"], mesh,
                      weight_bits_decode=4)
     assert m4["t_memory"] < m16["t_memory"] * 0.5   # rest is the KV band
+
+
+# ---- serving roofline terms vs a real engine (the cost-model seed) ---------
+# serve_* terms feed serve.slo.CostModel.from_roofline; the contract is that
+# they agree with what the packed-weight engine MEASURES: weight_stream_bytes
+# over each cached serving tree, and the attn_read_bytes counter a decode
+# wave accumulates, per format x {dense, paged}.
+
+def _serve_engine(**kw):
+    from repro.configs import get_reduced
+    from repro.core import make_anchor
+    from repro.core.qat import QATConfig
+    from repro.models import get_model as _gm
+    from repro.serve.engine import ElasticEngine
+    cfg = get_reduced("smollm-135m")
+    api = _gm(cfg, None)
+    params = api.init_params(jax.random.PRNGKey(0))
+    anchor = make_anchor(params, QATConfig(
+        formats=("mxint4", "mxint8"), anchor="mxint8", block_size=32))
+    eng = ElasticEngine(api, anchor, batch_slots=2, max_len=48,
+                        param_template=params, **kw)
+    return cfg, eng
+
+
+def test_serve_weight_stream_bytes_matches_packed_trees():
+    """Analytic per-tick weight stream vs the real packed containers, per
+    format (bf16 = the dense pseudo-format). No generate needed — the
+    bytes are a property of the cached tree. Norm vectors are the only
+    thing the analytic term drops, so the band is tight."""
+    cfg, eng = _serve_engine()
+    for fmt in ("mxint4", "mxint8", "bf16"):
+        eng.weights_for(fmt)
+    measured = eng.stats["weight_bytes"]
+    for fmt in ("mxint4", "mxint8", "bf16"):
+        analytic = cm.serve_weight_stream_bytes(cfg, fmt, block_size=32)
+        assert analytic == pytest.approx(measured[fmt], rel=0.02), \
+            (fmt, analytic, measured[fmt])
+    assert measured["mxint4"] < measured["mxint8"] < measured["bf16"]
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_serve_attn_bytes_match_engine_counters(layout):
+    """Analytic attention bytes/row/tick vs the engine's own accounting
+    over a real decode wave, under the gather read path (span == the
+    whole logical view for every batch row): the counter must equal
+    decode_ticks * slots * span exactly, and the byte multiplier must be
+    the same K+V-at-compute-dtype constant on both sides."""
+    import numpy as np
+    from repro.serve.engine import Request
+    kw = {"kv_layout": layout}
+    if layout == "paged":
+        kw.update(kv_page_size=8, attn_impl="gather")
+    cfg, eng = _serve_engine(**kw)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab, 8).astype(np.int32),
+                    max_new=3) for i in range(3)]
+    eng.generate(reqs, fmt_override="mxint8")
+    decode_ticks = sum(t["decode"] for t in eng.tick_trace)
+    assert decode_ticks > 0
+    span = cm.serve_attn_read_span(cfg, 48, layout, kv_page_size=8)
+    st = eng.stats
+    assert st["attn_tokens_read"] == decode_ticks * eng.slots * span
+    assert st["attn_read_bytes"] == pytest.approx(
+        st["attn_tokens_read"] * cm.serve_attn_bytes_per_row(cfg, 1))

@@ -1,0 +1,228 @@
+"""Property tests for FormatPolicy.pick() (serve/policy.py).
+
+The pick contract, pinned as properties (hypothesis when installed, via
+tests/_hypothesis_stub.py otherwise) with seeded always-run twins:
+
+  - monotonicity: more load never picks a WIDER format — true of the
+    threshold table (load axis) and of the cost path (occupancy axis);
+  - a quarantined rung is never handed out by a free-running pick;
+  - ``fmt_override`` wins over load, cost, quarantine and hysteresis,
+    and leaves the hysteresis state untouched;
+  - the cost-model pick degrades to the threshold table whenever there is
+    no model, no budget in the wave, or no measurement yet — an engine
+    without SLOs behaves bit-identically to the pre-cost-model policy.
+"""
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:      # property tests skip; seeded twins still run
+    from _hypothesis_stub import hypothesis, st
+
+from repro.serve.policy import FormatPolicy
+from repro.serve.slo import CostModel
+
+LADDER = ((32, "mxint4"), (8, "mxint6"), (0, "mxint8"))
+FMTS = [f for _, f in LADDER]                   # narrow -> wide
+
+
+def _policy(**kw):
+    return FormatPolicy(anchor="mxint8", ladder=LADDER, **kw)
+
+
+def _width(fmt):
+    return FMTS.index(fmt)                      # 0 = narrowest
+
+
+def _measured_cost(per_fmt_ms=(1.0, 2.0, 4.0), rows_slope_ms=0.5):
+    """A fully measured model where wider rungs are strictly slower and
+    every rung's cost grows with occupancy — the shape the analytic seed
+    guarantees (more weight bytes per tick at higher precision)."""
+    cm = CostModel(hbm_bytes_per_s=1e9, min_ticks=1)
+    for fmt, ms in zip(FMTS, per_fmt_ms):
+        cm.seed(fmt, ms * 1e6, rows_slope_ms * 1e6)
+        cm.observe(fmt, 0, ms * 1e-3)           # factor == 1.0 exactly
+    assert cm.any_measured()
+    return cm
+
+
+# ------------------------------------------------------- monotonicity
+
+@hypothesis.given(st.integers(0, 64), st.integers(0, 64),
+                  st.integers(0, 2048))
+@hypothesis.settings(deadline=None, max_examples=80)
+def test_threshold_pick_monotone_in_load(a, b, prefill_tokens):
+    """More queued work never yields a wider format (fresh policies, so
+    hysteresis is inert and the table alone decides)."""
+    lo, hi = sorted((a, b))
+    f_lo = _policy().pick(lo, prefill_tokens=prefill_tokens)
+    f_hi = _policy().pick(hi, prefill_tokens=prefill_tokens)
+    assert _width(f_hi) <= _width(f_lo)
+
+
+def test_threshold_pick_monotone_in_load_seeded():
+    picks = [_policy().pick(q) for q in range(0, 64)]
+    widths = [_width(f) for f in picks]
+    assert widths == sorted(widths, reverse=True)
+    assert picks[0] == "mxint8" and picks[-1] == "mxint4"
+    assert "mxint6" in picks                     # middle rung reachable
+
+
+@hypothesis.given(st.integers(1, 16), st.integers(1, 16),
+                  st.floats(0.5, 50.0, allow_nan=False))
+@hypothesis.settings(deadline=None, max_examples=80)
+def test_cost_pick_monotone_in_occupancy(r1, r2, budget_ms):
+    """The cost path's load axis is decode occupancy: more live rows can
+    only shrink the feasible set, so the pick never widens with rows."""
+    lo, hi = sorted((r1, r2))
+    f_lo = _policy(cost=_measured_cost()).pick(
+        0, tpot_budget_ms=budget_ms, decode_rows=lo)
+    f_hi = _policy(cost=_measured_cost()).pick(
+        0, tpot_budget_ms=budget_ms, decode_rows=hi)
+    assert _width(f_hi) <= _width(f_lo)
+
+
+def test_cost_pick_monotone_in_occupancy_and_budget_seeded():
+    for budget in (0.1, 1.4, 3.1, 6.0, 40.0):
+        widths = [_width(_policy(cost=_measured_cost()).pick(
+            0, tpot_budget_ms=budget, decode_rows=r)) for r in range(1, 12)]
+        assert widths == sorted(widths, reverse=True), (budget, widths)
+    # ... and a looser budget never narrows the pick at fixed occupancy.
+    for rows in (1, 4, 9):
+        widths = [_width(_policy(cost=_measured_cost()).pick(
+            0, tpot_budget_ms=b, decode_rows=rows))
+            for b in (0.1, 1.0, 2.0, 4.0, 8.0, 100.0)]
+        assert widths == sorted(widths), (rows, widths)
+
+
+def test_cost_pick_widest_feasible_else_fastest():
+    # base 1/2/4 ms + 0.5 ms/row; at 1 row: 1.5 / 2.5 / 4.5 ms. Fresh
+    # policies per case — hysteresis is a separate concern.
+    assert _policy(cost=_measured_cost()).pick(
+        0, tpot_budget_ms=100.0, decode_rows=1) == "mxint8"
+    assert _policy(cost=_measured_cost()).pick(
+        0, tpot_budget_ms=3.0, decode_rows=1) == "mxint6"
+    # Nothing fits a 1ms budget -> fastest predicted rung.
+    assert _policy(cost=_measured_cost()).pick(
+        0, tpot_budget_ms=1.0, decode_rows=1) == "mxint4"
+
+
+# -------------------------------------------------------- quarantine
+
+@hypothesis.given(st.sets(st.sampled_from(["mxint4", "mxint6"])),
+                  st.integers(0, 64), st.booleans())
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_pick_never_returns_quarantined(quarantined, load, with_cost):
+    pol = _policy(cost=_measured_cost() if with_cost else None)
+    for f in quarantined:
+        pol.quarantine(f)
+    got = pol.pick(load, tpot_budget_ms=0.1 if with_cost else None,
+                   decode_rows=4)
+    assert got not in pol.quarantined
+
+
+def test_pick_never_returns_quarantined_seeded():
+    for quarantined in ((), ("mxint4",), ("mxint6",),
+                        ("mxint4", "mxint6")):
+        for load in (0, 10, 40):
+            for with_cost, budget in ((False, None), (True, 0.1),
+                                      (True, 100.0)):
+                pol = _policy(
+                    cost=_measured_cost() if with_cost else None)
+                for f in quarantined:
+                    pol.quarantine(f)
+                got = pol.pick(load, tpot_budget_ms=budget,
+                               decode_rows=4)
+                assert got not in pol.quarantined, \
+                    (quarantined, load, with_cost, budget, got)
+
+
+def test_quarantine_everything_still_serves_anchor():
+    pol = _policy(cost=_measured_cost())
+    for f in FMTS:
+        pol.quarantine(f)                 # anchor is silently exempt
+    assert pol.quarantined == {"mxint4", "mxint6"}
+    assert pol.pick(64, tpot_budget_ms=0.01, decode_rows=16) == "mxint8"
+
+
+# ----------------------------------------------------------- override
+
+@hypothesis.given(st.sampled_from(FMTS + ["bf16"]), st.integers(0, 64),
+                  st.booleans())
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_override_always_wins(override, load, with_cost):
+    pol = _policy(cost=_measured_cost() if with_cost else None)
+    pol.quarantine("mxint4")
+    pol.quarantine("mxint6")
+    got = pol.pick(load, tpot_budget_ms=0.1 if with_cost else None,
+                   decode_rows=8, override=override)
+    assert got == override
+    assert pol.history[-1] == override
+
+
+def test_override_leaves_hysteresis_untouched():
+    """Operator overrides must not perturb the free-running trajectory:
+    the pick sequence after an override equals the sequence without it."""
+    loads = [0, 0, 40, 40, 40, 0, 0, 0]
+
+    def run(with_override):
+        pol = _policy(hysteresis=2)
+        out = []
+        for i, q in enumerate(loads):
+            if with_override and i == 3:
+                pol.pick(q, override="bf16")
+            out.append(pol.pick(q))
+        return out
+
+    assert run(True) == run(False)
+
+
+# -------------------------------------------- cost-model degradation
+
+def test_cost_pick_degrades_to_threshold_table():
+    """No model / no budget / nothing measured -> the threshold table
+    decides, pick-for-pick, over a whole load trajectory (hysteresis
+    included). This is the bit-identity contract for engines without
+    SLOs."""
+    loads = [0, 2, 40, 41, 42, 9, 9, 1, 0, 33, 0, 0]
+
+    def trajectory(pol, **kw):
+        return [pol.pick(q, prefill_tokens=16 * q, **kw) for q in loads]
+
+    baseline = trajectory(_policy())
+
+    seeded_only = CostModel(hbm_bytes_per_s=1e9)      # no observations
+    for i, f in enumerate(FMTS):
+        seeded_only.seed(f, (i + 1) * 1e6, 1e5)
+    assert not seeded_only.any_measured()
+    assert trajectory(_policy(cost=seeded_only),
+                      tpot_budget_ms=1.0, decode_rows=4) == baseline
+
+    # Measured model but a wave with no TPOT budget -> table again.
+    assert trajectory(_policy(cost=_measured_cost()),
+                      tpot_budget_ms=None, decode_rows=4) == baseline
+
+    # No model at all, budget present -> table.
+    assert trajectory(_policy(), tpot_budget_ms=1.0,
+                      decode_rows=4) == baseline
+
+
+def test_cost_pick_takes_over_once_measured():
+    cm = CostModel(hbm_bytes_per_s=1e9, min_ticks=1)
+    for i, f in enumerate(FMTS):
+        cm.seed(f, (i + 1) * 1e6, 0.0)
+    pol = _policy(cost=cm)
+    # Unmeasured: deep queue -> table says mxint4.
+    assert pol.pick(64, tpot_budget_ms=100.0, decode_rows=1) == "mxint4"
+    cm.observe("mxint8", 1, 3e-3)
+    # Measured + roomy budget: the same deep queue now picks the anchor —
+    # quality is the objective, the SLO the constraint.
+    pol2 = _policy(cost=cm)
+    assert pol2.pick(64, tpot_budget_ms=100.0, decode_rows=1) == "mxint8"
+
+
+def test_escalate_walks_toward_anchor():
+    pol = _policy()
+    assert pol.escalate("mxint4") == "mxint6"
+    assert pol.escalate("mxint6") == "mxint8"
+    assert pol.escalate("mxint8") is None
+    assert pol.escalate("bf16") is None

@@ -112,6 +112,36 @@ def test_sampling_per_slot_streams_and_determinism():
 
 
 @pytest.mark.slow
+def test_per_request_sampling_params_bit_identical_to_solo():
+    """Per-request temperature/top_p (serve/slo.py PR): three requests
+    with different sampling params share one batch wave, and each stream
+    is bit-identical to the same request served ALONE — the per-slot
+    sampling lanes feed the vmapped sampler without coupling rows, and
+    the engine-level values remain the defaults for requests that carry
+    none."""
+    def solo(req):
+        cfg, api, params, eng = _engine(temperature=0.9, top_p=0.85)
+        eng.generate([req], greedy=False, fmt_override="mxint8")
+        return req.out_tokens
+
+    def fresh_reqs(cfg):
+        prompt = (np.arange(8) % cfg.vocab).astype(np.int32)
+        return [
+            Request(rid=0, prompt=prompt.copy(), max_new=6,
+                    temperature=0.7, top_p=0.95),
+            Request(rid=1, prompt=prompt.copy(), max_new=6,
+                    temperature=1.3),            # engine top_p applies
+            Request(rid=2, prompt=prompt.copy(), max_new=6),  # defaults
+        ]
+
+    cfg, api, params, eng = _engine(temperature=0.9, top_p=0.85)
+    batch = fresh_reqs(cfg)
+    eng.generate(list(batch), greedy=False, fmt_override="mxint8")
+    for ref, want in zip(fresh_reqs(cfg), batch):
+        assert solo(ref) == want.out_tokens, want.rid
+
+
+@pytest.mark.slow
 def test_top_p_collapse_equals_greedy():
     """top_p -> 0 keeps only the argmax token: sampled == greedy stream
     (checks the nucleus mask keeps exactly the top-1 prefix)."""
