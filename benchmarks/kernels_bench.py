@@ -94,7 +94,8 @@ def autotune_qmatmul(m, k, n, fmt_name, *, n_iter=5, verbose=False):
             f"autotune: every tile candidate failed for "
             f"{fmt_name} ({m},{k},{n}) — run one candidate outside the "
             "sweep to see the kernel error")
-    dispatch.register_tiles(m, k, n, fmt_name, best, kind)
+    dispatch.register_tiles(m, k, n, fmt_name, best, kind,
+                            block_size=fmt.block_size)
     return best, best_us
 
 

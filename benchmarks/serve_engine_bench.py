@@ -344,6 +344,106 @@ def bench_speculative(api, anchor, params, *, slots, max_len, n_requests,
                          "not paying for itself on this workload")
 
 
+def bench_mesh(api, anchor, params, *, mesh_spec, slots, max_len,
+               n_requests, max_new, vocab, page_size=8, long_every=3,
+               long_len=40):
+    """The --mesh sweep (docs/serving_internals.md §11): the single-device
+    engine vs the tensor-parallel engine on a (data, model) mesh, SAME
+    workload, across {dense, paged} x every format. Two outputs:
+
+      - a HARD stream-identity gate (process-failing): greedy and seeded
+        token streams on the mesh must be bit-identical to the
+        single-device engine — sharding is a placement knob, never a
+        token knob;
+      - the per-chip weight stream: each chip reads only its shard, so
+        weight_bytes_per_chip must land near 1/n_model of the global
+        bytes (replicated norm vectors keep it just above exact).
+
+    On CPU run under XLA_FLAGS=--xla_force_host_platform_device_count=N
+    to expose enough host devices.
+    """
+    from repro.launch.mesh import parse_mesh
+    n_data, n_model = parse_mesh(mesh_spec)
+    need = n_data * n_model
+    if len(jax.devices()) < need:
+        raise SystemExit(
+            f"--mesh {mesh_spec} needs {need} devices; only "
+            f"{len(jax.devices())} visible — on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    mesh = jax.make_mesh((n_data, n_model), ("data", "model"))
+    rng = np.random.default_rng(0)
+    is_long = lambda i: i % long_every == 1 % long_every
+    prompts = [rng.integers(0, vocab,
+                            long_len if is_long(i) else PROMPT_LEN)
+               .astype(np.int32) for i in range(n_requests)]
+    per_slot = -(-(long_len + max_new) // page_size)
+
+    def run(m, fmt, kv, greedy):
+        kv_kw = dict(kv_layout="paged", kv_page_size=page_size,
+                     kv_num_pages=slots * per_slot + 1) \
+            if kv == "paged" else {}
+        eng = ElasticEngine(api, anchor, batch_slots=slots,
+                            max_len=max_len, param_template=params,
+                            fused=False, seed=0, mesh=m, temperature=0.9,
+                            top_p=0.95, **kv_kw)
+        reqs = [Request(rid=i, prompt=prompts[i].copy(), max_new=max_new)
+                for i in range(n_requests)]
+        eng.generate(reqs[:WARMUP], fmt_override=fmt, greedy=greedy)
+        t0 = time.perf_counter()
+        ticks0 = eng.stats["ticks"]
+        eng.generate(reqs[WARMUP:], fmt_override=fmt, greedy=greedy)
+        dt = time.perf_counter() - t0
+        st = eng.stats
+        if st["kv_pages_alloc"] != st["kv_pages_freed"]:
+            raise SystemExit(
+                f"--mesh leaked KV pages: {st['kv_pages_alloc']} "
+                f"allocated, {st['kv_pages_freed']} freed")
+        return ([list(r.out_tokens) for r in reqs], st,
+                st["ticks"] - ticks0, dt)
+
+    print(f"# mesh {n_data}x{n_model} vs single device, "
+          f"{n_requests} requests, slots={slots}")
+    print("mesh,fmt,kv,sampling,weight_bytes,weight_bytes_per_chip,"
+          "chip_ratio,ticks_single,ticks_mesh,wall_single_s,wall_mesh_s")
+    checked = 0
+    for kv in ("dense", "paged"):
+        for fmt in FORMATS:
+            for greedy in (True, False):
+                s1, _, t1, w1 = run(None, fmt, kv, greedy)
+                s2, st, t2, w2 = run(mesh, fmt, kv, greedy)
+                if s1 != s2:
+                    raise SystemExit(
+                        f"--mesh streams diverged from the single-device "
+                        f"engine (fmt={fmt}, kv={kv}, greedy={greedy}) — "
+                        f"sharding broke bit-identity")
+                checked += 1
+                wb = st["weight_bytes"][fmt]
+                wbc = st["weight_bytes_per_chip"][fmt]
+                print(f"{st['mesh']},{fmt},{kv},"
+                      f"{'greedy' if greedy else 'seeded'},{wb},{wbc},"
+                      f"{wbc / wb:.3f},{t1},{t2},{w1:.2f},{w2:.2f}")
+    print(f"# mesh vs single device: token streams identical across "
+          f"{checked} configs = True")
+    ratios = []
+    for fmt in FORMATS:
+        # per-chip stream must approach 1/n_model (norms stay replicated)
+        eng = ElasticEngine(api, anchor, batch_slots=slots,
+                            max_len=max_len, param_template=params,
+                            fused=False, mesh=mesh)
+        st_w = eng.weights_for(fmt)  # noqa: F841 — populates stats
+        st = eng.stats
+        ratios.append(st["weight_bytes_per_chip"][fmt]
+                      / st["weight_bytes"][fmt])
+    lo, hi = 1.0 / n_model, 1.0 / n_model + 0.06
+    if not all(lo <= r < hi for r in ratios):
+        raise SystemExit(
+            f"per-chip weight stream ratios {ratios} outside "
+            f"[{lo:.3f}, {hi:.3f}) — the packed leaves are not sharded")
+    print(f"# per-chip weight stream: {ratios[0]:.3f}/"
+          f"{ratios[1]:.3f}/{ratios[2]:.3f} of global bytes "
+          f"(bf16/mxint8/mxint4) at n_model={n_model} = gate passed")
+
+
 def bench_slo(api, anchor, params, *, slots, max_len, horizon, wl_seed,
               page_size=8, burst_thresh=6):
     """The --slo sweep (docs/serving_internals.md §10): SLO-tiered serving
@@ -634,6 +734,13 @@ def main():
                     help="arrival-window ticks for the --slo workload")
     ap.add_argument("--wl-seed", type=int, default=0,
                     help="workload seed for --slo")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="run the tensor-parallel sweep instead of the "
+                         "perf matrix: single-device vs meshed engine on "
+                         "a (data, model) mesh, with a hard stream-"
+                         "identity gate and the per-chip weight-stream "
+                         "ratio (e.g. --mesh 1x2; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=2)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -642,6 +749,14 @@ def main():
     qat = QATConfig(formats=("mxint4", "mxint8"), anchor="mxint8",
                     block_size=32)
     anchor = make_anchor(params, qat, get_format("mxint8", 32))
+
+    if args.mesh:
+        bench_mesh(api, anchor, params, mesh_spec=args.mesh,
+                   slots=args.slots, max_len=args.max_len,
+                   n_requests=args.requests, max_new=args.max_new,
+                   vocab=cfg.vocab, page_size=args.page_size,
+                   long_every=args.long_every, long_len=args.long_len)
+        return
 
     if args.chaos:
         bench_chaos(api, anchor, params, slots=args.slots,

@@ -1,0 +1,19 @@
+"""Root pytest conftest: a 2-device CPU platform for the whole test session.
+
+The tensor-parallel serving tests (tests/test_mesh_serving.py) compare a
+``(1, 2)`` CPU mesh against the single-device engine, which requires the
+host platform to expose 2 devices BEFORE the first ``import jax`` anywhere
+in the session — exactly what a root conftest guarantees (pytest imports it
+before collecting any test module).
+
+Same contract as ``launch/dryrun.py``: append to any pre-set XLA_FLAGS
+rather than overwriting, and skip entirely when the caller already pinned a
+host device count (their setting wins). Single-device behavior is
+unaffected — nothing shards unless a test builds a mesh.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+_existing = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _existing:
+    os.environ["XLA_FLAGS"] = f"{_existing} {_FLAG}=2".strip()

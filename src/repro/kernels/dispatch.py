@@ -81,19 +81,31 @@ def _interpret() -> bool:
 # ---------------------------------------------------------------------------
 # Tile selection: static table + autotune-registered cache
 # ---------------------------------------------------------------------------
-# (m, k, n, fmt_name, kind) -> (tm, tn, tk); kind is "mx" or "int4"
-# (for "int4" the tn entry tiles half_n = n // 2, matching the kernel grid).
-_TILE_CACHE: Dict[Tuple[int, int, int, str, str], Tuple[int, int, int]] = {}
+# (m, k, n, block_size, fmt_name, kind) -> (tm, tn, tk); kind is "mx" or
+# "int4" (for "int4" the tn entry tiles half_n = n // 2, matching the kernel
+# grid). The key is EXACTLY the shapes the kernel is traced with — under
+# shard_map these are the per-shard LOCAL dims (a tensor-parallel projection
+# sees n / n_model, or k / n_model for row-parallel), so autotune for a
+# meshed engine must register the local shapes, and entries tuned at global
+# shapes simply miss (heuristic fallback) instead of mis-tiling the shard.
+# block_size is part of the key: a tk tuned for one block size need not
+# divide another's scale blocking (kp // bs would truncate — silently wrong
+# scales), so entries never apply across block sizes.
+_TILE_CACHE: Dict[Tuple[int, int, int, int, str, str],
+                  Tuple[int, int, int]] = {}
 
 # Hard ceilings keeping one (TM,TK)+(TK,TN) operand pair comfortably in VMEM.
 _TM_CAP, _TN_CAP, _TK_CAP = 128, 256, 512
 
 
 def register_tiles(m: int, k: int, n: int, fmt_name: str,
-                   tiles: Tuple[int, int, int], kind: str = "mx") -> None:
-    """Pin (tm, tn, tk) for an exact (M, K, N, fmt) — autotune results land
-    here (see ``benchmarks/kernels_bench.py::autotune_qmatmul``)."""
-    _TILE_CACHE[(m, k, n, fmt_name, kind)] = tuple(tiles)
+                   tiles: Tuple[int, int, int], kind: str = "mx",
+                   block_size: int = 32) -> None:
+    """Pin (tm, tn, tk) for an exact (M, K, N, fmt@block_size) — autotune
+    results land here (``benchmarks/kernels_bench.py::autotune_qmatmul``).
+    (M, K, N) are the shapes the kernel is traced with: per-shard local
+    dims under a mesh, global dims on one device."""
+    _TILE_CACHE[(m, k, n, block_size, fmt_name, kind)] = tuple(tiles)
 
 
 def tile_cache() -> Dict:
@@ -124,11 +136,20 @@ def select_tiles(m: int, k: int, n: int, fmt: MXFormat,
     padding subject to VMEM-friendly caps — sublane multiples of 8 for M,
     lane-dim multiples of 8 (128 when it divides) for N, block-size
     multiples for K so scales tile alongside the weight.
+
+    ``(m, k, n)`` are whatever shapes this trace actually sees — per-shard
+    local dims inside shard_map — and the lookup keys on them plus
+    ``fmt.block_size``, so a cached entry can never pick tiles that don't
+    divide the shapes (or scale blocking) of the call at hand. A registered
+    entry that nonetheless violates the kernel's alignment rules (stale
+    hand-registration) is ignored, not applied.
     """
-    key = (m, k, n, fmt.name, kind)
-    if key in _TILE_CACHE:
-        return _TILE_CACHE[key]
     bs = fmt.block_size
+    key = (m, k, n, bs, fmt.name, kind)
+    if key in _TILE_CACHE:
+        tm, tn, tk = _TILE_CACHE[key]
+        if tm % 8 == 0 and tn > 0 and tk % bs == 0:
+            return tm, tn, tk
     n_eff = n // 2 if kind == "int4" else n
     tm = _best_tile(m, 8, _TM_CAP)
     tn = 128 if n_eff % 128 == 0 else _best_tile(n_eff, 8, _TN_CAP)

@@ -48,6 +48,14 @@ keeps the original gather + ``decode_attention`` pair; "auto" picks
 ``kernels_bench.py --smoke`` CI gate assert which path is live.
 
 Layout/placement conventions are documented in docs/serving_internals.md §5.
+
+Tensor parallelism: every dimension here — Hkv, page size, page count — is
+derived from the INPUT shapes, never from a model config, so under the
+head-sharded serving mesh (docs §11) the kernels run unchanged on each
+shard's local slice of the pools (kv-head axis split across chips) with the
+REPLICATED block table and its global page ids. The grid covers local pages
+only; no collective appears at this layer (attention is exactly per-kv-head
+parallel — the psum lives in the wo projection above).
 """
 from __future__ import annotations
 

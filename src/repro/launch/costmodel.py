@@ -344,16 +344,27 @@ def serve_attn_bytes_per_row(cfg: ModelConfig, span_tokens: int) -> float:
 
 def serve_roofline_terms(cfg: ModelConfig, formats,
                          *, max_len: int, kv_layout: str = "dense",
-                         kv_page_size: int = 16,
-                         block_size: int = 32) -> Dict[str, Dict[str, float]]:
+                         kv_page_size: int = 16, block_size: int = 32,
+                         n_model: int = 1) -> Dict[str, Dict[str, float]]:
     """Per-format decode roofline terms for the serving cost model:
     ``{fmt: {"weight_bytes": <per tick>, "attn_bytes_per_row": <per row per
     tick>}}``. The weight read happens once per tick regardless of batch
     occupancy (one fused step streams the whole tree); the attention read
-    scales with live rows."""
+    scales with live rows.
+
+    ``n_model``: tensor-parallel shards. The roofline is PER CHIP — a
+    meshed engine streams only its weight shard and its kv-head slice of
+    every token read, so both terms divide by the mesh's 'model' axis size
+    (the single-chip ``HBM_BW`` the cost model divides by stays a per-chip
+    number either way). Replicated leaves (norms, biases) are O(d_model)
+    noise at this granularity, same as the unsharded approximation.
+    """
+    if n_model < 1:
+        raise ValueError(f"n_model ({n_model}) must be >= 1")
     span = serve_attn_read_span(cfg, max_len, kv_layout, kv_page_size)
-    attn = serve_attn_bytes_per_row(cfg, span)
-    return {f: {"weight_bytes": serve_weight_stream_bytes(cfg, f, block_size),
+    attn = serve_attn_bytes_per_row(cfg, span) / n_model
+    return {f: {"weight_bytes":
+                serve_weight_stream_bytes(cfg, f, block_size) / n_model,
                 "attn_bytes_per_row": attn}
             for f in formats}
 

@@ -8,8 +8,27 @@ roofline (EXPERIMENTS.md). Results are written incrementally to JSON so the
 sweep is resumable cell-by-cell.
 """
 # The VERY FIRST lines, before any other import: 512 placeholder devices.
+# Never clobber flags the caller already set (CI exports its own XLA_FLAGS
+# for CPU-mesh tests), and skip entirely when a host-device-count flag is
+# already present — the caller's device count wins.
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+HOST_DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _merged_xla_flags(existing: str, n: int = 512):
+    """XLA_FLAGS value with ``--xla_force_host_platform_device_count=n``
+    appended to ``existing``, or None when ``existing`` already pins a host
+    device count (setting it twice would silently override the caller's)."""
+    if HOST_DEVICE_COUNT_FLAG in existing:
+        return None
+    return f"{existing} {HOST_DEVICE_COUNT_FLAG}={n}".strip()
+
+
+_flags = _merged_xla_flags(os.environ.get("XLA_FLAGS", ""))
+if _flags is not None:
+    os.environ["XLA_FLAGS"] = _flags
+del _flags
 
 import argparse          # noqa: E402
 import json              # noqa: E402

@@ -22,3 +22,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh over however many local devices exist (tests)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def parse_mesh(spec: str):
+    """``"DxM"`` -> ``(n_data, n_model)`` — the CLI mesh-shape syntax used
+    by the serving bench (``--mesh 1x2``)."""
+    parts = spec.lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(f"mesh spec {spec!r} is not of the form 'DxM'")
+    try:
+        n_data, n_model = int(parts[0]), int(parts[1])
+    except ValueError:
+        raise ValueError(f"mesh spec {spec!r} is not of the form 'DxM'")
+    if n_data < 1 or n_model < 1:
+        raise ValueError(f"mesh spec {spec!r} must have positive axes")
+    return n_data, n_model

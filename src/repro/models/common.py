@@ -142,11 +142,19 @@ class QuantCtx:
     When set, packed-MX weight containers skip the XLA dequant below and are
     fed straight to the fused Pallas dequant-GEMM dispatch
     (``repro.kernels.dispatch.qmatmul``) — the weight never exists dense.
+
+    ``tp_axis`` names the tensor-parallel mesh axis when the forward runs
+    inside ``shard_map`` over head/ffn-sharded weights. Row-parallel
+    projections (wo, w_down) then request a single ``psum`` per projection
+    pair via ``dense(..., tp_reduce=True)``; everything else is local math
+    on the shard. ``None`` (the default) is the single-device path and adds
+    no collectives.
     """
 
     qat: Optional[QATConfig] = None
     fmt_idx: Optional[jax.Array] = None
     qmm: Optional[Any] = None
+    tp_axis: Optional[str] = None
 
     def maybe_quant(self, w: jax.Array, name: str) -> jax.Array:
         if self.qat is None or not self.qat.enabled or self.fmt_idx is None:
@@ -166,7 +174,8 @@ class QuantCtx:
 
     def dense(self, x: jax.Array, w, name: str,
               b: Optional[jax.Array] = None,
-              out_logical: Optional[Tuple] = None) -> jax.Array:
+              out_logical: Optional[Tuple] = None, *,
+              tp_reduce: bool = False) -> jax.Array:
         """y = x @ fake_quant(w) in the compute dtype.
 
         `w` may be a packed-MX container (MXTensor / PackedInt4Leaf): with a
@@ -174,6 +183,11 @@ class QuantCtx:
         dequantized right here — inside the layer scan — so only one layer's
         bf16 weights are ever resident (the XLA-level analogue of the Pallas
         contract; see serve/packed_params.py).
+
+        ``tp_reduce=True`` marks a row-parallel projection: under tensor
+        parallelism (``tp_axis`` set) the shard-local partial product is
+        psum'd over the mesh axis BEFORE the bias add, so the (replicated)
+        bias is applied exactly once.
         """
         if self.qmm is not None and is_packed_leaf(w):
             y = self.qmm(x, w, name)
@@ -182,6 +196,8 @@ class QuantCtx:
             wq = self.maybe_quant(w, name).astype(x.dtype)
             y = jax.lax.dot_general(x, wq, (((x.ndim - 1,), (0,)), ((), ())),
                                     preferred_element_type=x.dtype)
+        if tp_reduce and self.tp_axis is not None:
+            y = jax.lax.psum(y, self.tp_axis)
         if b is not None:
             y = y + b.astype(x.dtype)
         if out_logical is not None:

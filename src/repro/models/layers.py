@@ -481,7 +481,7 @@ def attention_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig,
 
     out = out.reshape(b, s, h * hd)
     out = ctx.dense(out, p["wo"], name + ".wo",
-                    out_logical=("batch", None, None))
+                    out_logical=("batch", None, None), tp_reduce=True)
     return out, new_kv
 
 
@@ -511,7 +511,7 @@ def mlp_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig, name: str):
             ctx.dense(x, p["w_up"], name + ".w_up", p.get("b_up"),
                       out_logical=("batch", None, "mlp")))
     return ctx.dense(hidden, p["w_down"], name + ".w_down", p.get("b_down"),
-                     out_logical=("batch", None, None))
+                     out_logical=("batch", None, None), tp_reduce=True)
 
 
 def moe_block(ctx: QuantCtx, x: jax.Array, p, cfg: ModelConfig, name: str):

@@ -394,8 +394,22 @@ def forward_hidden(ctx: QuantCtx, params, cfg: ModelConfig, x, positions,
     return hidden, new_cache, aux
 
 
-def _embed(params, cfg: ModelConfig, tokens):
-    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+def _embed(params, cfg: ModelConfig, tokens, tp_axis=None):
+    emb = params["embed"]
+    if tp_axis is not None and emb.shape[0] != cfg.vocab:
+        # Vocab-sharded table inside shard_map: each token's row lives on
+        # exactly one shard. Offset the ids into the local range, mask the
+        # out-of-range rows to zero, and psum — every shard contributes the
+        # true row or an exact zero, so the sum is bit-identical to the
+        # unsharded lookup.
+        v_local = emb.shape[0]
+        local = tokens - jax.lax.axis_index(tp_axis) * v_local
+        ok = (local >= 0) & (local < v_local)
+        rows = jnp.take(emb, jnp.where(ok, local, 0), axis=0)
+        x = jnp.where(ok[..., None], rows, jnp.zeros((), emb.dtype))
+        x = jax.lax.psum(x, tp_axis).astype(cfg.compute_dtype)
+        return shard_act(x, ("batch", None, None))
+    x = jnp.take(emb, tokens, axis=0).astype(cfg.compute_dtype)
     return shard_act(x, ("batch", None, None))
 
 
@@ -409,16 +423,26 @@ def _head_logits(ctx: QuantCtx, params, cfg: ModelConfig, h_last):
     In fused serving the params tree stays packed: a quantized lm_head leaf
     (non-default QAT exclusions) routes through the dequant-GEMM hook like
     every other projection instead of crashing on `.astype`.
+
+    Under tensor parallelism the head weight is vocab-sharded (lm_head
+    columns / tied embed rows), so the local matmul yields a vocab slice;
+    a tiled all_gather reassembles the exact global logits (pure
+    concatenation — no arithmetic, so bit-identical).
     """
     from repro.models.common import is_packed_leaf
     if not cfg.tie_embeddings and ctx.qmm is not None and \
             is_packed_leaf(params["lm_head"]):
-        return ctx.qmm(h_last.astype(jnp.float32), params["lm_head"],
-                       "lm_head")
-    return jax.lax.dot_general(
-        h_last.astype(jnp.float32),
-        _lm_head_w(params, cfg).astype(jnp.float32),
-        (((1,), (0,)), ((), ())))
+        logits = ctx.qmm(h_last.astype(jnp.float32), params["lm_head"],
+                         "lm_head")
+    else:
+        logits = jax.lax.dot_general(
+            h_last.astype(jnp.float32),
+            _lm_head_w(params, cfg).astype(jnp.float32),
+            (((1,), (0,)), ((), ())))
+    if ctx.tp_axis is not None and logits.shape[-1] != cfg.vocab:
+        logits = jax.lax.all_gather(logits, ctx.tp_axis,
+                                    axis=logits.ndim - 1, tiled=True)
+    return logits
 
 
 def _last_hidden(hidden, cache_len):
@@ -507,6 +531,10 @@ class ModelApi:
     #                                chaining composes rather than resetting
     attn_impl: str = "gather"      # paged decode read path the serving
     #                                entry points were built with
+    tp_axis: Optional[str] = None  # tensor-parallel mesh axis the serving
+    #                                entry points psum/all_gather over when
+    #                                run inside shard_map (make_model
+    #                                tp_axis=...); None = single-device math
 
 
 def _cache_for_block(cfg: ModelConfig, j: int, b: int, s_max: int, dtype):
@@ -542,7 +570,14 @@ def _cache_axes_for_block(cfg: ModelConfig, j: int):
             "shift_c": (None, "batch", None, None)}
 
 
-def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
+def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None, *,
+               tp_axis: Optional[str] = None) -> ModelApi:
+    """Build the ModelApi. ``tp_axis`` names the tensor-parallel mesh axis
+    to reduce over when the serving entry points run inside ``shard_map``
+    with head/ffn/vocab-sharded weights — pass ``cfg`` with the LOCAL head
+    counts (and ``head_dim`` pinned) but the GLOBAL vocab (see
+    serve/engine.py's mesh path and docs/serving_internals.md §11).
+    Training entry points ignore it."""
     n_fmts = len(qat.formats) if qat else 0
 
     def _ctx(fmt_idx):
@@ -660,10 +695,10 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
             each row's own last real token and cache_len is the true length,
             which exactly masks the pad KV entries at decode.
             """
-            ctx = QuantCtx(qmm=qmm)
+            ctx = QuantCtx(qmm=qmm, tp_axis=tp_axis)
             tokens = batch["tokens"]
             b, s = tokens.shape
-            x = _embed(params, cfg, tokens)
+            x = _embed(params, cfg, tokens, tp_axis)
             extra = 0
             if cfg.vision_tokens > 0:
                 ve = batch["vision_embeds"].astype(cfg.compute_dtype)
@@ -704,10 +739,11 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
                 raise ValueError(
                     "chunked prefill does not support prepended vision "
                     "embeds; use monolithic admission")
-            ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
+            ctx = QuantCtx(qmm=qmm, tp_axis=tp_axis)   # no fake-quant in
+            #                                            serving (see prefill)
             tokens = batch["tokens"]
             b, c = tokens.shape
-            x = _embed(params, cfg, tokens)
+            x = _embed(params, cfg, tokens, tp_axis)
             start = jnp.asarray(start_pos, jnp.int32)
             positions = start + jnp.broadcast_to(jnp.arange(c)[None], (b, c))
             hidden, new_cache, _ = forward_hidden(
@@ -722,10 +758,11 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
 
         def serve_step(params, batch, cache, cache_len):
             """One decode step: batch['tokens'] (B,1) against the cache."""
-            ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
+            ctx = QuantCtx(qmm=qmm, tp_axis=tp_axis)   # no fake-quant in
+            #                                            serving (see prefill)
             tokens = batch["tokens"]
             b = tokens.shape[0]
-            x = _embed(params, cfg, tokens)
+            x = _embed(params, cfg, tokens, tp_axis)
             positions = cache_len[:, None]
             hidden, new_cache, _ = forward_hidden(
                 ctx, params, cfg, x, positions, cache=cache,
@@ -752,11 +789,12 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
                 raise ValueError(
                     "mixed_step does not support prepended vision embeds; "
                     "use sequential admission")
-            ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
+            ctx = QuantCtx(qmm=qmm, tp_axis=tp_axis)   # no fake-quant in
+            #                                            serving (see prefill)
             tokens = batch["tokens"]
             q_len = batch["q_len"].astype(jnp.int32)
             b, c = tokens.shape
-            x = _embed(params, cfg, tokens)
+            x = _embed(params, cfg, tokens, tp_axis)
             positions = cache_len[:, None] + \
                 jnp.broadcast_to(jnp.arange(c)[None], (b, c))
             hidden, new_cache, _ = forward_hidden(
@@ -790,11 +828,12 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
                 raise ValueError(
                     "verify_step does not support prepended vision embeds; "
                     "disable speculative decoding for VLM configs")
-            ctx = QuantCtx(qmm=qmm)   # no fake-quant in serving (see prefill)
+            ctx = QuantCtx(qmm=qmm, tp_axis=tp_axis)   # no fake-quant in
+            #                                            serving (see prefill)
             tokens = batch["tokens"]
             q_len = batch["q_len"].astype(jnp.int32)
             b, c = tokens.shape
-            x = _embed(params, cfg, tokens)
+            x = _embed(params, cfg, tokens, tp_axis)
             positions = cache_len[:, None] + \
                 jnp.broadcast_to(jnp.arange(c)[None], (b, c))
             hidden, new_cache, _ = forward_hidden(
@@ -843,5 +882,6 @@ def make_model(cfg: ModelConfig, qat: Optional[QATConfig] = None) -> ModelApi:
         verify_step=verify_step,
         with_qmm=with_qmm,
         with_serving=with_serving,
+        tp_axis=tp_axis,
     )
     return api

@@ -92,7 +92,7 @@ from repro.core.formats import get_format
 from repro.core.mx import MXTensor
 from repro.kernels.paged_attention import pages_read, pages_read_mq
 from repro.models.common import spec_accept_counts
-from repro.models.transformer import ModelApi
+from repro.models.transformer import ModelApi, make_model
 from repro.runtime.fault import InjectedFault
 from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
                                        make_packed_mixed_step,
@@ -101,7 +101,10 @@ from repro.serve.packed_params import (PackedInt4Leaf, anchor_block_size,
                                        make_packed_prefill_slot,
                                        make_packed_serve_step,
                                        make_packed_verify_step,
-                                       weight_stream_bytes)
+                                       packed_param_shardings,
+                                       repack_splitn_for_tp,
+                                       weight_stream_bytes,
+                                       weight_stream_bytes_local)
 from repro.serve.policy import FormatPolicy, SpecConfig
 from repro.serve.slo import SLOClass, tier_rank
 
@@ -308,7 +311,8 @@ class ElasticEngine:
                  max_step_retries: int = 2,
                  fault_injector=None,
                  speculative: Optional[SpecConfig] = None,
-                 admission_order: str = "fifo"):
+                 admission_order: str = "fifo",
+                 mesh=None):
         self.api = api
         self.anchor = anchor
         self.slots = batch_slots
@@ -342,6 +346,51 @@ class ElasticEngine:
         self._template = param_template if param_template is not None else \
             jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
         self._block_size = anchor_block_size(anchor)
+        # ---- tensor parallelism (docs/serving_internals.md §11) ----------
+        # mesh: shard the packed leaves / KV pools over the mesh's 'model'
+        # axis and run every step function inside shard_map — token streams
+        # stay bit-identical to the single-device engine. Other mesh axes
+        # must have size 1 (data parallelism = one engine per replica; see
+        # serve/replicas.py).
+        self.mesh = mesh
+        self._tp = 1
+        if mesh is not None:
+            names = tuple(getattr(mesh, "axis_names", ()))
+            if "model" not in names:
+                raise ValueError(
+                    "ElasticEngine(mesh=...) needs a mesh with a 'model' "
+                    f"axis; got axes {names}")
+            sizes = dict(zip(names, mesh.devices.shape))
+            tp = int(sizes["model"])
+            extra = {a: int(n) for a, n in sizes.items()
+                     if a != "model" and n != 1}
+            if extra:
+                raise ValueError(
+                    "ElasticEngine shards over the 'model' mesh axis only; "
+                    f"axes {extra} have size > 1 — run one engine per "
+                    "data-parallel slice (serve.replicas.ReplicaSet)")
+            cfg_g = api.cfg
+            if cfg_g.family != "dense" or cfg_g.vision_tokens > 0:
+                raise ValueError(
+                    "tensor-parallel serving supports pure-attention dense "
+                    f"text stacks only; family {cfg_g.family!r} is not "
+                    "wired for head-sharded step functions")
+            bs_tp = self._block_size * tp
+            bad = {k: v for k, v in {
+                "n_heads": cfg_g.n_heads, "n_kv_heads": cfg_g.n_kv_heads,
+                "vocab": cfg_g.vocab, "d_ff": cfg_g.d_ff}.items()
+                if v % tp}
+            # Row-parallel packed scales tile the contraction dim by the MX
+            # block: those dims must split into whole scale rows per shard.
+            bad.update({k: v for k, v in {
+                "n_heads*head_dim": cfg_g.n_heads * cfg_g.hd,
+                "d_ff": cfg_g.d_ff}.items() if v % bs_tp})
+            if bad:
+                raise ValueError(
+                    f"mesh 'model' axis size {tp} cannot shard this "
+                    f"config: {bad} not divisible (block_size="
+                    f"{self._block_size})")
+            self._tp = tp
         self._weights: Dict[str, object] = {}       # fmt -> serving pytree
         self._fmt_swaps = 0
         self._ticks = 0
@@ -390,6 +439,10 @@ class ElasticEngine:
         # measured attention term.
         self._attn_token_bytes = self._attn_layers * 2 * cfg.n_kv_heads \
             * cfg.hd * jnp.dtype(cfg.compute_dtype).itemsize
+        # Per-chip KV read bytes: pools shard over kv heads on the mesh, so
+        # each chip streams 1/tp of every token's K+V (exact — n_kv_heads %
+        # tp is guarded above). Single chip: identical to the global number.
+        self._attn_token_bytes_chip = self._attn_token_bytes // self._tp
         # Chunked prefill admission (None = monolithic; see class docstring
         # and docs/serving_internals.md "Admission & scheduling").
         if prefill_chunk == "auto":
@@ -498,6 +551,26 @@ class ElasticEngine:
                 cache_shape["block_table"].shape[1] * kv_page_size
         else:
             self._attn_read_span = self.max_len + api.cfg.vision_tokens
+        # Tensor-parallel cache placement: the 5D leaves (dense K/V
+        # (G, B, S, Hkv, D) and paged pools (G, P, ps, Hkv, D)) shard over
+        # kv heads (axis 3); the block table and every host-built step
+        # argument stay replicated with GLOBAL page ids, so the page
+        # bookkeeping in generate() is mesh-oblivious.
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._cache_pspecs = jax.tree_util.tree_map(
+                lambda l: (PartitionSpec(None, None, None, "model", None)
+                           if l.ndim == 5 else PartitionSpec()),
+                cache_shape)
+            self._cache_shardings = jax.tree_util.tree_map(
+                lambda l: NamedSharding(
+                    self.mesh,
+                    PartitionSpec(None, None, None, "model", None)
+                    if l.ndim == 5 else PartitionSpec()),
+                cache_shape)
+        else:
+            self._cache_pspecs = None
+            self._cache_shardings = None
         # Per-slot RNG: reseeded from (engine key, rid) at admission.
         self._key = jax.random.PRNGKey(seed)
         self._slot_keys = jax.random.split(self._key, self.slots)
@@ -507,51 +580,73 @@ class ElasticEngine:
         # decode steps bake attn_impl in at build time (same rationale as
         # `fused`: no stale-jit-cache hazards from flipping a global); the
         # prefill entry points are attn_impl-independent.
-        if self.attn_impl == "gather":
-            step_api = api
+        # Tensor parallelism: build every step function from a LOCAL model —
+        # the same architecture at per-shard head counts (head_dim pinned:
+        # the derived default would recompute it from the full d_model) with
+        # the GLOBAL vocab (the head all_gathers its logit slice back) — and
+        # run it inside shard_map over the mesh. Two psums per layer (wo,
+        # w_down), one psum for the embed lookup, one all_gather at the
+        # head; everything else is local math on the shard (docs §11).
+        if self.mesh is not None:
+            cfg_g = api.cfg
+            local_cfg = dataclasses.replace(
+                cfg_g, n_heads=cfg_g.n_heads // self._tp,
+                n_kv_heads=cfg_g.n_kv_heads // self._tp,
+                head_dim=cfg_g.hd)
+            src_api = make_model(local_cfg, api.qat, tp_axis="model")
         else:
-            if api.with_serving is None:
+            src_api = api
+        if self.attn_impl == "gather":
+            step_api = src_api
+        else:
+            if src_api.with_serving is None:
                 raise ValueError(
                     f"model family {api.cfg.family!r} cannot rebuild its "
                     f"serving entry points with attn_impl={attn_impl!r}")
-            step_api = api.with_serving(attn_impl=self.attn_impl)
-        self._dense_step = jax.jit(step_api.serve_step)
-        self._dense_prefill_slot = jax.jit(self._counting(api.prefill_slot))
-        self._packed_step = jax.jit(
-            make_packed_serve_step(api, self._block_size, fused=self.fused,
-                                   attn_impl=self.attn_impl))
-        self._packed_prefill_slot = jax.jit(self._counting(
-            make_packed_prefill_slot(api, self._block_size,
-                                     fused=self.fused)))
+            step_api = src_api.with_serving(attn_impl=self.attn_impl)
+        self._dense_step = self._mesh_jit(step_api.serve_step, 2)
+        self._dense_prefill_slot = self._mesh_jit(
+            self._counting(src_api.prefill_slot), 3)
+        self._packed_step = self._mesh_jit(
+            make_packed_serve_step(src_api, self._block_size,
+                                   fused=self.fused,
+                                   attn_impl=self.attn_impl), 2)
+        self._packed_prefill_slot = self._mesh_jit(self._counting(
+            make_packed_prefill_slot(src_api, self._block_size,
+                                     fused=self.fused)), 3)
         # Chunked-admission entry points (jit is lazy: nothing compiles
         # unless prefill_chunk is actually used). Compiles once per chunk
         # bucket — the cursor is a traced argument.
-        self._dense_prefill_chunk = jax.jit(
-            self._counting(api.prefill_chunk_slot)) \
-            if api.prefill_chunk_slot is not None else None
-        self._packed_prefill_chunk = jax.jit(self._counting(
-            make_packed_prefill_chunk(api, self._block_size,
-                                      fused=self.fused))) \
-            if api.prefill_chunk_slot is not None else None
+        self._dense_prefill_chunk = self._mesh_jit(
+            self._counting(src_api.prefill_chunk_slot), 3) \
+            if src_api.prefill_chunk_slot is not None else None
+        self._packed_prefill_chunk = self._mesh_jit(self._counting(
+            make_packed_prefill_chunk(src_api, self._block_size,
+                                      fused=self.fused)), 3) \
+            if src_api.prefill_chunk_slot is not None else None
         # Unified mixed-tick entry points (lazy jit, one compile per chunk
         # width bucket — counted like chunk compiles). They bake attn_impl
         # in like the decode steps: the ragged multi-query paged read runs
         # the gather-free MQ kernel under "paged_kernel".
-        self._dense_mixed = jax.jit(self._counting(step_api.mixed_step)) \
+        self._dense_mixed = self._mesh_jit(
+            self._counting(step_api.mixed_step), 2) \
             if step_api.mixed_step is not None else None
-        self._packed_mixed = jax.jit(self._counting(
-            make_packed_mixed_step(api, self._block_size, fused=self.fused,
-                                   attn_impl=self.attn_impl))) \
-            if api.mixed_step is not None else None
+        self._packed_mixed = self._mesh_jit(self._counting(
+            make_packed_mixed_step(src_api, self._block_size,
+                                   fused=self.fused,
+                                   attn_impl=self.attn_impl)), 2) \
+            if src_api.mixed_step is not None else None
         # Speculative verify entry points (lazy jit — compile only when a
         # spec tick actually runs). Logits come back at ALL k+1 positions
         # (B, C, V), so the guard's finite check reduces the lane axis too.
-        self._dense_verify = jax.jit(self._counting(step_api.verify_step)) \
+        self._dense_verify = self._mesh_jit(
+            self._counting(step_api.verify_step), 2) \
             if step_api.verify_step is not None else None
-        self._packed_verify = jax.jit(self._counting(
-            make_packed_verify_step(api, self._block_size, fused=self.fused,
-                                    attn_impl=self.attn_impl))) \
-            if api.verify_step is not None else None
+        self._packed_verify = self._mesh_jit(self._counting(
+            make_packed_verify_step(src_api, self._block_size,
+                                    fused=self.fused,
+                                    attn_impl=self.attn_impl)), 2) \
+            if src_api.verify_step is not None else None
         self._finite_rows_mq = jax.jit(
             lambda lg: jnp.isfinite(lg).all(axis=(-2, -1)))
 
@@ -561,6 +656,56 @@ class ElasticEngine:
             self._prefill_traces += 1    # runs at trace time only
             return fn(*args)
         return wrapped
+
+    def _mesh_jit(self, fn, n_out: int):
+        """``jax.jit`` — or, on a TP mesh, ``jit(shard_map(fn))``.
+
+        Every step entry point shares one calling convention: the weight
+        pytree is argument 0, the cache pytree argument 2, and (of the
+        ``n_out`` outputs) the cache comes back at index 1; everything else
+        — batch dicts, cursors, cache_len, logits — is replicated. The
+        weights' in_specs are read off their committed shardings per call
+        and the wrapped executable is cached per spec tree, mirroring
+        jit's one-executable-per-pytree-structure behavior across the
+        dense/packed/per-format trees. ``check_vma=False``: the replicated
+        outputs are bit-identical across shards BY CONSTRUCTION (the head
+        all_gathers full logits everywhere), which the static replication
+        checker cannot prove through psum-into-bias arithmetic.
+        """
+        if self.mesh is None:
+            return jax.jit(fn)
+        from jax.sharding import PartitionSpec
+        from repro.train.compression import shard_map
+        compiled: Dict = {}
+
+        def call(weights, *rest):
+            w_specs = jax.tree_util.tree_map(
+                lambda l: l.sharding.spec, weights)
+            flat, treedef = jax.tree_util.tree_flatten(w_specs)
+            key = (treedef, tuple(flat), len(rest))
+            if key not in compiled:
+                in_specs = [w_specs] + [PartitionSpec()] * len(rest)
+                in_specs[2] = self._cache_pspecs
+                out_specs = [PartitionSpec()] * n_out
+                out_specs[1] = self._cache_pspecs
+                compiled[key] = jax.jit(shard_map(
+                    fn, mesh=self.mesh, in_specs=tuple(in_specs),
+                    out_specs=tuple(out_specs), check_vma=False))
+            return compiled[key](weights, *rest)
+        return call
+
+    def _weight_shardings(self, w):
+        """NamedShardings placing a serving weight tree on the TP mesh —
+        packed containers via ``packed_param_shardings`` (codes follow the
+        dense weight's logical axes, scales the moved-last layout), dense
+        bf16 trees via the plain logical-axis rules."""
+        from repro.sharding.rules import param_shardings
+        is_packed = lambda x: isinstance(x, (MXTensor, PackedInt4Leaf))
+        if any(is_packed(l) for l in jax.tree_util.tree_leaves(
+                w, is_leaf=is_packed)):
+            return packed_param_shardings(w, self.api.param_axes(),
+                                          self.mesh)
+        return param_shardings(self.api.param_axes(), w, self.mesh)
 
     # ---- KV cache ---------------------------------------------------------
     def _init_cache(self, b):
@@ -614,15 +759,27 @@ class ElasticEngine:
                                        dtype=self.api.cfg.compute_dtype)
             else:
                 w = self.dense_weights_for(fmt_name)
+            if self.mesh is not None:
+                shardings = self._weight_shardings(w)
+                # split-N int4 nibbles interleave the output halves; a
+                # column-sharded leaf must be repacked per shard first
+                # (see repack_splitn_for_tp) or half the head / ff-block
+                # contributions pair wrong inside shard_map.
+                w = repack_splitn_for_tp(w, shardings, self._tp)
+                w = jax.device_put(w, shardings)
             self._weights[fmt_name] = w
             self._fmt_swaps += 1
             if self.policy.cost is not None:
                 # Replace the format's analytic weight term with the bytes
                 # the cached tree actually streams (seed() keeps any
-                # learned calibration factor).
+                # learned calibration factor). On a mesh both roofline
+                # terms are PER-CHIP: each chip streams only its weight
+                # shard and its slice of every KV token.
+                wb = (weight_stream_bytes_local(w) if self.mesh is not None
+                      else weight_stream_bytes(w))
                 self.policy.cost.seed(
-                    fmt_name, weight_stream_bytes(w),
-                    self._attn_read_span * self._attn_token_bytes)
+                    fmt_name, wb,
+                    self._attn_read_span * self._attn_token_bytes_chip)
         return self._weights[fmt_name]
 
     def dense_weights_for(self, fmt_name: str):
@@ -908,6 +1065,9 @@ class ElasticEngine:
             active: List[Optional[Request]] = [None] * b
             slot_len = [0] * b             # host mirror of cache_len
             cache = self._init_cache(b)
+            if self.mesh is not None:
+                # Pools/dense KV shard over kv heads; block table replicated.
+                cache = jax.device_put(cache, self._cache_shardings)
             cache_len = jnp.zeros((b,), jnp.int32)
             tokens = jnp.zeros((b, 1), jnp.int32)
             pinned: Optional[str] = None   # format for this batch's lifetime
@@ -1907,7 +2067,17 @@ class ElasticEngine:
             "speculative": (f"{self.speculative.draft_fmt}:k"
                             f"{self.speculative.k}"
                             if self.speculative is not None else None),
+            # "DxM" mesh shape (None = single device): a snapshot taken on
+            # a mesh holds sharded-layout state and must resume on the
+            # same mesh shape.
+            "mesh": self._mesh_str(),
         }
+
+    def _mesh_str(self) -> Optional[str]:
+        if self.mesh is None:
+            return None
+        n_dev = int(np.prod(self.mesh.devices.shape))
+        return f"{n_dev // self._tp}x{self._tp}"
 
     def _save_snapshot(self, root: str, requests: List[Request], st: dict,
                        greedy: bool, fmt_override: Optional[str]) -> str:
@@ -2024,6 +2194,8 @@ class ElasticEngine:
         cache = jax.tree_util.tree_unflatten(treedef, [
             jnp.asarray(arrays[f"cache_{n:04d}"]).astype(t.dtype)
             for n, t in enumerate(tmpl_leaves)])
+        if self.mesh is not None:
+            cache = jax.device_put(cache, self._cache_shardings)
         self._key = jnp.asarray(arrays["engine_key"])
         self._slot_keys = jnp.asarray(arrays["slot_keys"])
         if "slot_temp" in arrays:
@@ -2115,6 +2287,9 @@ class ElasticEngine:
                            for f, t in self._weights.items()},
             "weight_bytes": {f: weight_stream_bytes(t)
                              for f, t in self._weights.items()},
+            "weight_bytes_per_chip": {f: weight_stream_bytes_local(t)
+                                      for f, t in self._weights.items()},
+            "mesh": self._mesh_str(),
             "fmt_swaps": self._fmt_swaps,
             "ticks": self._ticks,
             "tokens_out": self._tokens_out,

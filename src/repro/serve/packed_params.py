@@ -189,12 +189,70 @@ def densify_params(packed_params, block_size: int = 32,
         is_leaf=lambda x: isinstance(x, (MXTensor, PackedInt4Leaf)))
 
 
+def repack_splitn_for_tp(packed_params, shardings, tp: int):
+    """Re-nibble split-N int4 leaves whose output (N) axis is sharded.
+
+    Split-N byte column ``j`` pairs output columns ``(j, j + N/2)`` — a
+    GLOBAL interleave. Contiguously sharding the packed array hands each
+    shard bytes whose nibbles decode to a permuted, non-contiguous column
+    set, while the row-parallel consumer downstream (wo / w_down) shards
+    its contraction rows contiguously — half the per-head / per-ff-block
+    contributions would pair wrong under ``shard_map``. Repack so each
+    shard's contiguous slice is a self-contained split-N layout of its own
+    ``N/tp`` columns: the local unpack then yields exactly the columns the
+    local step function expects, and the fused int4 kernel still reads a
+    valid split-N tile (its dims come from the local shapes).
+
+    Column-sharded leaves are detected from ``shardings`` (the tree
+    ``packed_param_shardings`` built): a ``PackedInt4Leaf`` whose packed
+    spec carries a mesh axis on the last dim. Split-K leaves and k-sharded
+    split-N leaves (row-parallel) slice cleanly and pass through.
+    """
+    def fix(leaf, shd):
+        if not (isinstance(leaf, PackedInt4Leaf) and leaf.layout == "splitn"
+                and tp > 1):
+            return leaf
+        spec = shd.packed.spec
+        last = spec[-1] if len(spec) == leaf.packed.ndim else None
+        if last is None:
+            return leaf
+        # shard count along the byte-column axis — size-1 mesh axes (e.g.
+        # 'data' on a (1, tp) serving mesh) never split it, so standard
+        # split-N nibbling is already correct for those leaves.
+        mesh_shape = shd.packed.mesh.shape
+        n_shards = 1
+        for nm in (last if isinstance(last, tuple) else (last,)):
+            n_shards *= int(mesh_shape[nm])
+        if n_shards <= 1:
+            return leaf
+        codes = unpack_int4_splitn_jnp(leaf.packed)
+        n = codes.shape[-1]
+        if n % (2 * n_shards):
+            raise ValueError(
+                f"cannot repack split-N leaf with N={n} over "
+                f"{n_shards} shards")
+        n_loc = n // n_shards
+        packed = jnp.concatenate(
+            [pack_int4_splitn_jnp(codes[..., s * n_loc:(s + 1) * n_loc])
+             for s in range(n_shards)], axis=-1)
+        return dataclasses.replace(leaf, packed=packed)
+
+    is_c = lambda x: isinstance(x, (MXTensor, PackedInt4Leaf))
+    return jax.tree_util.tree_map(fix, packed_params, shardings,
+                                  is_leaf=is_c)
+
+
 def packed_param_shardings(packed_abstract, axes_tree, mesh, rules=None):
     """NamedShardings for a packed-params pytree.
 
     Codes/packed arrays shard with the dense weight's logical axes (the
     packed dim reuses the block axis' mapping when divisibility allows);
     scale tensors follow the moved-last layout; raw leaves use their axes.
+
+    These placements are what the tensor-parallel serving path
+    (``ElasticEngine(mesh=...)``) feeds to ``jax.device_put`` before
+    wrapping the step functions in ``shard_map`` — see
+    docs/serving_internals.md §11 "Tensor-parallel serving".
     """
     from jax.sharding import NamedSharding
     from repro.sharding.rules import spec_for_axes
@@ -389,3 +447,26 @@ def weight_stream_bytes(params) -> int:
     """
     return sum(leaf.size * leaf.dtype.itemsize
                for leaf in jax.tree_util.tree_leaves(params))
+
+
+def weight_stream_bytes_local(params) -> int:
+    """Per-chip weight-stream bytes for a (possibly sharded) weight pytree.
+
+    Uses each leaf's actual sharding to size the LOCAL shard — on a
+    ``(1, n_model)`` mesh this is ~``weight_stream_bytes / n_model`` (exactly,
+    up to replicated bias/norm leaves), which is the number the per-chip
+    roofline cost model must be seeded with. Falls back to the global size
+    for uncommitted/unsharded leaves.
+    """
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None:
+            shape = sharding.shard_shape(leaf.shape)
+            n = 1
+            for d in shape:
+                n *= d
+        else:
+            n = leaf.size
+        total += n * leaf.dtype.itemsize
+    return total

@@ -154,18 +154,25 @@ class CostModel:
     @classmethod
     def from_roofline(cls, cfg, formats, *, max_len: int,
                       kv_layout: str = "dense", kv_page_size: int = 16,
-                      block_size: int = 32,
+                      block_size: int = 32, n_model: int = 1,
                       hbm_bytes_per_s: Optional[float] = None,
                       ema: float = 0.25, min_ticks: int = 2) -> "CostModel":
         """Seed from ``launch.costmodel.serve_roofline_terms`` for every
         format name in ``formats`` (include ``"bf16"`` for the dense
-        pseudo-format)."""
+        pseudo-format).
+
+        ``n_model``: tensor-parallel shards — scales both byte terms to
+        the PER-CHIP stream (``HBM_BW`` is a per-chip bandwidth, so a
+        meshed engine seeded with global bytes would predict tick times
+        ``n_model``x too slow and mis-rank the SLO tiers).
+        """
         from repro.launch.costmodel import serve_roofline_terms
         cm = cls(hbm_bytes_per_s=hbm_bytes_per_s, ema=ema,
                  min_ticks=min_ticks)
         for fmt, t in serve_roofline_terms(
                 cfg, formats, max_len=max_len, kv_layout=kv_layout,
-                kv_page_size=kv_page_size, block_size=block_size).items():
+                kv_page_size=kv_page_size, block_size=block_size,
+                n_model=n_model).items():
             cm.seed(fmt, t["weight_bytes"], t["attn_bytes_per_row"])
         return cm
 

@@ -185,3 +185,63 @@ def test_serve_attn_bytes_match_engine_counters(layout):
     assert st["attn_tokens_read"] == decode_ticks * eng.slots * span
     assert st["attn_read_bytes"] == pytest.approx(
         st["attn_tokens_read"] * cm.serve_attn_bytes_per_row(cfg, 1))
+
+
+def test_serve_roofline_terms_scale_with_mesh():
+    """Satellite regression: the serving roofline is PER CHIP. A tensor-
+    parallel engine streams 1/n_model of the weight bytes and 1/n_model of
+    every KV token's bytes per chip, so seeding the cost model from the
+    unsharded terms would predict tick times n_model x too slow. Both
+    terms must divide exactly by the mesh's 'model' axis size."""
+    from repro.configs import get_reduced
+    cfg = get_reduced("smollm-135m")
+    fmts = ("mxint4", "mxint8", "bf16")
+    base = cm.serve_roofline_terms(cfg, fmts, max_len=48)
+    tp2 = cm.serve_roofline_terms(cfg, fmts, max_len=48, n_model=2)
+    for f in fmts:
+        assert tp2[f]["weight_bytes"] == \
+            pytest.approx(base[f]["weight_bytes"] / 2)
+        assert tp2[f]["attn_bytes_per_row"] == \
+            pytest.approx(base[f]["attn_bytes_per_row"] / 2)
+    with pytest.raises(ValueError):
+        cm.serve_roofline_terms(cfg, fmts, max_len=48, n_model=0)
+
+
+def test_costmodel_from_roofline_per_chip_seed():
+    """CostModel.from_roofline(n_model=2) must seed per-chip byte terms —
+    halved predictions at the same per-chip HBM bandwidth."""
+    from repro.configs import get_reduced
+    from repro.serve.slo import CostModel
+    cfg = get_reduced("smollm-135m")
+    c1 = CostModel.from_roofline(cfg, ("mxint8",), max_len=48)
+    c2 = CostModel.from_roofline(cfg, ("mxint8",), max_len=48, n_model=2)
+    p1 = c1.raw_predict_s("mxint8", rows=2)
+    p2 = c2.raw_predict_s("mxint8", rows=2)
+    assert p1 is not None and p2 is not None
+    assert p2 == pytest.approx(p1 / 2)
+
+
+def test_meshed_engine_seeds_per_chip_bytes():
+    """A meshed engine's cost-model seed and stats must report the per-chip
+    weight stream (~1/2 the global bytes at tp=2; replicated norm vectors
+    keep it from being exact)."""
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 host devices (root conftest provides them)")
+    from repro.launch.mesh import make_debug_mesh
+    from repro.serve.policy import FormatPolicy
+    from repro.serve.slo import CostModel
+    cfg, eng1 = _serve_engine()
+    _, eng2 = _serve_engine(
+        mesh=make_debug_mesh(1, 2),
+        policy=FormatPolicy("mxint8", cost=CostModel()))
+    for fmt in ("mxint8", "bf16"):
+        eng1.weights_for(fmt)
+        eng2.weights_for(fmt)
+        g = eng1.stats["weight_bytes"][fmt]
+        local = eng2.stats["weight_bytes_per_chip"][fmt]
+        assert 0.5 <= local / g < 0.56, (fmt, local, g)
+        # the cost model was seeded with the per-chip number
+        cost = eng2.policy.cost
+        assert cost.terms[fmt].base_s == pytest.approx(
+            local / cost.hbm_bytes_per_s)

@@ -3,10 +3,10 @@ import jax
 import numpy as np
 import pytest
 
-# Lock the device count to this container's single CPU BEFORE importing
-# repro.launch.dryrun anywhere in this module — its import sets
-# XLA_FLAGS=...device_count=512 (required first lines per the dry-run spec),
-# which must not leak into the test environment.
+# Lock the device count BEFORE importing repro.launch.dryrun anywhere in
+# this module. The root conftest pins 2 CPU devices (mesh-serving tests);
+# dryrun's import must respect a pre-set host-device-count flag and NOT
+# bump it to its 512-device default.
 jax.devices()
 
 
@@ -69,9 +69,32 @@ def test_make_debug_mesh_single_device():
 
 
 def test_production_mesh_requires_many_devices():
-    """On this 1-device test process the production mesh must refuse —
-    proving the dry-run's 512-device env is NOT leaking into tests."""
+    """On this 2-device test process (conftest.py pins the count) the
+    production mesh must refuse — proving the dry-run's 512-device env is
+    NOT leaking into tests: importing repro.launch.dryrun must leave a
+    pre-set host-device-count flag alone (the satellite regression for the
+    old unconditional XLA_FLAGS overwrite)."""
+    from repro.launch import dryrun  # noqa: F401 — import must not clobber
     from repro.launch.mesh import make_production_mesh
-    assert len(jax.devices()) == 1
+    assert len(jax.devices()) == 2
     with pytest.raises(Exception):
         make_production_mesh(multi_pod=False)
+
+
+def test_merged_xla_flags_appends_and_skips():
+    """The flag-merge rule itself: append to existing flags, never
+    overwrite; skip (None) when a host device count is already pinned."""
+    from repro.launch.dryrun import _merged_xla_flags
+    # empty env: just the device-count flag
+    assert _merged_xla_flags("", 512) == \
+        "--xla_force_host_platform_device_count=512"
+    # unrelated pre-set flags are preserved, not clobbered
+    merged = _merged_xla_flags("--xla_cpu_foo=1", 512)
+    assert merged.startswith("--xla_cpu_foo=1 ")
+    assert merged.endswith("--xla_force_host_platform_device_count=512")
+    # a pre-set device count wins: skip entirely
+    assert _merged_xla_flags(
+        "--xla_force_host_platform_device_count=2", 512) is None
+    assert _merged_xla_flags(
+        "--xla_cpu_foo=1 --xla_force_host_platform_device_count=2",
+        512) is None

@@ -141,8 +141,72 @@ def test_tile_registration_overrides_table():
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-4)
     finally:
-        dispatch._TILE_CACHE.pop((7, 64, 96, "mxint8", "mx"), None)
+        dispatch._TILE_CACHE.pop((7, 64, 96, 32, "mxint8", "mx"), None)
     assert dispatch.select_tiles(7, 64, 96, fmt) == base
+
+
+def test_tile_cache_keys_on_block_size():
+    """Regression (tensor-parallel serving PR): the tile cache must key on
+    block_size. An entry tuned at bs=64 (tk=64) applied to a bs=96 call
+    with the same (M, K, N) gives a tk that doesn't divide the scale
+    blocking — ``kp // bs`` truncates and the kernel reads wrong scales —
+    so cross-block-size hits must be misses."""
+    fmt64 = get_format("mxint8", 64)
+    fmt32 = get_format("mxint8", 32)
+    dispatch.register_tiles(7, 192, 96, "mxint8", (8, 48, 64),
+                            block_size=64)
+    try:
+        assert dispatch.select_tiles(7, 192, 96, fmt64) == (8, 48, 64)
+        # same (m, k, n), different block size: the bs=64 entry must NOT
+        # apply — the key includes block_size, so the bs=32 lookup falls
+        # back to the heuristic, whose tk always divides its own blocking.
+        t32 = dispatch.select_tiles(7, 192, 96, fmt32)
+        assert t32 != (8, 48, 64)
+        assert t32[2] % 32 == 0
+    finally:
+        dispatch._TILE_CACHE.pop((7, 192, 96, 64, "mxint8", "mx"), None)
+
+
+def test_tile_cache_local_shard_shapes_hit_globals_miss():
+    """Regression (tensor-parallel serving PR): under shard_map the kernel
+    traces with per-shard LOCAL shapes. An entry registered at the local
+    shape must hit; the global-shape entry must miss (heuristic fallback)
+    rather than hand the shard tiles that don't divide it."""
+    fmt = get_format("mxint8", 32)
+    n_global, tp = 256, 2
+    n_local = n_global // tp
+    # global-shape registration with tiles that would NOT divide the local
+    # shard (tn=256 > n_local): must not leak into the local-shape lookup
+    dispatch.register_tiles(8, 64, n_global, "mxint8", (8, 256, 64))
+    dispatch.register_tiles(8, 64, n_local, "mxint8", (8, 64, 32))
+    try:
+        assert dispatch.select_tiles(8, 64, n_local, fmt) == (8, 64, 32)
+        assert dispatch.select_tiles(8, 64, n_global, fmt) == (8, 256, 64)
+        # the registered local tiles actually run on a local-shaped GEMM
+        x = _rand((8, 64), seed=18)
+        w = _rand((64, n_local), seed=19)
+        t, leaf = _leaf(w, fmt)
+        got = dispatch.qmatmul(x, leaf, mode="pallas")
+        want = x @ dequantize(t, jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+    finally:
+        dispatch._TILE_CACHE.pop((8, 64, n_global, 32, "mxint8", "mx"), None)
+        dispatch._TILE_CACHE.pop((8, 64, n_local, 32, "mxint8", "mx"), None)
+
+
+def test_tile_cache_ignores_misaligned_entries():
+    """A hand-registered entry violating the kernel's alignment rules
+    (tm not a sublane multiple / tk not a block-size multiple) is ignored
+    — heuristic fallback — never applied to corrupt the scale padding."""
+    fmt = get_format("mxint8", 32)
+    dispatch.register_tiles(16, 64, 96, "mxint8", (7, 48, 48))  # bad tm+tk
+    try:
+        tm, tn, tk = dispatch.select_tiles(16, 64, 96, fmt)
+        assert (tm, tn, tk) != (7, 48, 48)
+        assert tm % 8 == 0 and tk % fmt.block_size == 0
+    finally:
+        dispatch._TILE_CACHE.pop((16, 64, 96, 32, "mxint8", "mx"), None)
 
 
 def test_select_tiles_divide_padded_dims():
